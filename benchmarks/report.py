@@ -1,0 +1,72 @@
+"""Regenerate the EXPERIMENTS.md roofline tables from dry-run artifacts.
+
+  PYTHONPATH=src python -m benchmarks.report [--dir benchmarks/results/dryrun]
+"""
+import argparse
+import glob
+import json
+import os
+
+
+def load(dir_, mesh):
+    rows = {}
+    for f in sorted(glob.glob(os.path.join(dir_, f"*__{mesh}.json"))):
+        r = json.load(open(f))
+        rows[(r["arch"], r["shape"])] = r
+    return rows
+
+
+def table(rows, title):
+    out = [f"### {title}", "",
+           "| arch | shape | compute | memory | collective | dominant | useful | MFU bound |",
+           "|---|---|---|---|---|---|---|---|"]
+    for (arch, shape), r in sorted(rows.items()):
+        if r.get("status") != "ok":
+            out.append(f"| {arch} | {shape} | — | — | — | FAILED | — | — |")
+            continue
+        ro = r["roofline"]
+        out.append(
+            f"| {arch} | {shape} | {ro['compute_s']*1e3:.2f} ms | "
+            f"{ro['memory_s']*1e3:.2f} ms | {ro['collective_s']*1e3:.2f} ms | "
+            f"{ro['dominant']} | {ro['useful_flops_ratio']:.2f} | "
+            f"{ro['mfu_bound']:.4f} |")
+    return "\n".join(out)
+
+
+def compare(base, opt):
+    out = ["### Baseline → optimized (single-pod)", "",
+           "| arch | shape | step bound before | after | × | dominant before → after |",
+           "|---|---|---|---|---|---|"]
+    for key in sorted(base):
+        if key not in opt:
+            continue
+        b, o = base[key], opt[key]
+        if b.get("status") != "ok" or o.get("status") != "ok":
+            continue
+        bs = max(b["roofline"][k] for k in ("compute_s", "memory_s", "collective_s"))
+        os_ = max(o["roofline"][k] for k in ("compute_s", "memory_s", "collective_s"))
+        out.append(
+            f"| {key[0]} | {key[1]} | {bs*1e3:.2f} ms | {os_*1e3:.2f} ms | "
+            f"{bs/os_:.2f}× | {b['roofline']['dominant']} → {o['roofline']['dominant']} |")
+    return "\n".join(out)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="benchmarks/results/dryrun")
+    ap.add_argument("--baseline", default="benchmarks/results/dryrun_baseline")
+    args = ap.parse_args()
+    single = load(args.dir, "single")
+    multi = load(args.dir, "multi")
+    base = load(args.baseline, "single")
+    print(table(single, "Roofline — single pod (16×16 = 256 chips), optimized"))
+    print()
+    if multi:
+        print(table(multi, "Roofline — multi-pod (2×16×16 = 512 chips), optimized"))
+        print()
+    if base:
+        print(compare(base, single))
+
+
+if __name__ == "__main__":
+    main()

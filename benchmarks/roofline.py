@@ -1,0 +1,56 @@
+"""Roofline benchmark: reads the dry-run artifacts and emits per-cell
+roofline terms (the §Roofline table), plus kernel micro-benchmarks."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+import time
+from typing import List, Tuple
+
+Row = Tuple[str, float, str]
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "results", "dryrun")
+
+
+def roofline_rows(mesh: str = "single") -> List[Row]:
+    rows: List[Row] = []
+    for f in sorted(glob.glob(os.path.join(RESULTS_DIR, f"*__{mesh}.json"))):
+        r = json.load(open(f))
+        if r.get("status") != "ok":
+            rows.append((f"roofline/{r['arch']}/{r['shape']}/{mesh}", 0.0, "FAILED"))
+            continue
+        ro = r["roofline"]
+        rows.append((
+            f"roofline/{r['arch']}/{r['shape']}/{mesh}",
+            ro["compute_s"] * 1e6,
+            f"compute_s={ro['compute_s']:.4g};memory_s={ro['memory_s']:.4g};"
+            f"collective_s={ro['collective_s']:.4g};dominant={ro['dominant']};"
+            f"useful={ro['useful_flops_ratio']:.3f};mfu_bound={ro['mfu_bound']:.4f}"))
+    return rows
+
+
+def kernel_micro() -> List[Row]:
+    """Interpret-mode kernel micro-bench (CPU): correctness-path timing +
+    analytic TPU roofline estimate per kernel."""
+    import jax
+    import jax.numpy as jnp
+    from repro.distributed.hlo import HBM_BW, PEAK_FLOPS_BF16
+    from repro.kernels import ops
+
+    rows = []
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    B, H, KV, S, hd = 1, 4, 2, 512, 64
+    q = jax.random.normal(ks[0], (B, H, S, hd), jnp.float32)
+    k = jax.random.normal(ks[1], (B, KV, S, hd), jnp.float32)
+    v = jax.random.normal(ks[2], (B, KV, S, hd), jnp.float32)
+    out = ops.flash_attention(q, k, v, block_q=128, block_k=128)
+    out.block_until_ready()
+    t0 = time.perf_counter()
+    ops.flash_attention(q, k, v, block_q=128, block_k=128).block_until_ready()
+    us = (time.perf_counter() - t0) * 1e6
+    flops = 4 * B * H * S * S * hd * 0.5  # causal
+    tpu_est_us = flops / PEAK_FLOPS_BF16 * 1e6
+    rows.append(("kernel/flash_attention_512", us,
+                 f"flops={flops:.3g};tpu_roofline_us={tpu_est_us:.2f}"))
+    return rows

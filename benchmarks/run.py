@@ -1,0 +1,105 @@
+# One function per paper table/figure. Prints ``name,us_per_call,derived`` CSV.
+import argparse
+import sys
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma-separated benchmark names (default: all)")
+    ap.add_argument("--fast", action="store_true",
+                    help="skip the live-pool serving benchmark")
+    args = ap.parse_args()
+
+    from benchmarks import paper_figures as pf
+    from benchmarks import roofline as rl
+
+    benches = {
+        "table2": pf.table2_zoo,
+        "fig3": pf.fig3_latency_table,
+        "fig5": pf.fig5_prototype,
+        "fig6": pf.fig6_vs_static_greedy,
+        "fig7": pf.fig7_cv_sweep,
+        "fig8": pf.fig8_usage_vs_cv,
+        "fig9": pf.fig9_decomposition,
+        "threshold": pf.threshold_ablation,
+        "roofline_single": lambda: rl.roofline_rows("single"),
+        "roofline_multi": lambda: rl.roofline_rows("multi"),
+        "kernels": rl.kernel_micro,
+        "tpu_pool": _tpu_pool,
+    }
+    if not args.fast:
+        benches["live_pool"] = _live_pool
+
+    selected = args.only.split(",") if args.only else list(benches)
+    print("name,us_per_call,derived")
+    failures = 0
+    for name in selected:
+        try:
+            for row in benches[name]():
+                print(f"{row[0]},{row[1]:.3f},{row[2]}")
+        except Exception as e:  # pragma: no cover
+            failures += 1
+            print(f"{name},0.0,ERROR:{type(e).__name__}:{e}", file=sys.stderr)
+    if failures:
+        raise SystemExit(1)
+
+
+def _tpu_pool():
+    """Beyond-paper: ModiPick over (arch × mesh) TPU pool members whose
+    latency profiles come from the dry-run rooflines (core/tpu_pool.py)."""
+    import os
+    from repro.core.netmodel import NetworkModel
+    from repro.core.policy import ModiPick, StaticGreedy
+    from repro.core.simulate import Simulator
+    from repro.core.tpu_pool import load_pool, to_zoo
+
+    results = "benchmarks/results/dryrun"
+    if not os.path.isdir(results) or not load_pool(results):
+        results = "benchmarks/results/dryrun_baseline"
+    pool = load_pool(results)
+    if not pool:
+        return [("tpu_pool/skipped", 0.0, "no dry-run artifacts")]
+    zoo = to_zoo(pool)
+    sim = Simulator(entries=zoo, network=NetworkModel(20.0, 10.0), seed=20)
+    rows = []
+    for sla in (100, 300, 600, 1500, 3000):
+        mp = sim.run(ModiPick(t_threshold=50.0, gamma=4.0), sla, 2000)
+        sg = sim.run(StaticGreedy(sla), sla, 2000)
+        top = max(mp.model_usage, key=mp.model_usage.get)
+        rows.append((f"tpu_pool/sla_{sla}", 0.0,
+                     f"mp_attain={mp.sla_attainment:.3f};mp_q={mp.mean_accuracy:.3f};"
+                     f"sg_attain={sg.sla_attainment:.3f};sg_q={sg.mean_accuracy:.3f};"
+                     f"top={top}"))
+    return rows
+
+
+def _live_pool():
+    """Live serving e2e: real JAX pool behind ModiPick vs static greedy."""
+    import numpy as np
+    from repro.configs.registry import get_config
+    from repro.core.netmodel import NetworkModel
+    from repro.core.policy import ModiPick, StaticGreedy
+    from repro.serving.executor import PoolExecutor
+    from repro.serving.pool import scaled_family
+
+    rows = []
+    variants = scaled_family(get_config("qwen2-1.5b"), widths=(0.5, 1.0, 2.0),
+                             cache_len=160)
+    tokens = np.random.default_rng(0).integers(0, 500, (4, 128), dtype=np.int32)
+    net = NetworkModel(mean_ms=20.0, std_ms=10.0)
+    for name, pol in [("modipick", ModiPick(t_threshold=25.0)),
+                      ("static_greedy", StaticGreedy(120.0))]:
+        ex = PoolExecutor(variants, net, pol, seed=3)
+        ex.warm_up(tokens)
+        for _ in range(60):
+            ex.execute(tokens, t_sla=120.0)
+        s = ex.summary()
+        rows.append((f"live_pool/{name}", s["mean_latency_ms"] * 1e3,
+                     f"attain={s['sla_attainment']:.3f};quality={s['mean_quality']:.3f};"
+                     f"p99_ms={s['p99_latency_ms']:.1f}"))
+    return rows
+
+
+if __name__ == '__main__':
+    main()

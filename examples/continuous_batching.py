@@ -1,0 +1,58 @@
+"""Continuous-batching demo: Orca-style slot engine over a shared KV pool.
+
+Requests with different prompt/generation lengths stream through a fixed
+decode batch; finished sequences retire immediately and free their slot.
+
+  PYTHONPATH=src python examples/continuous_batching.py --requests 8
+"""
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.registry import ARCH_IDS, get_config
+from repro.models import model as M
+from repro.serving.batcher import ContinuousBatcher, GenRequest
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2-1.5b", choices=ARCH_IDS)
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--cache-len", type=int, default=128)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch).reduced()
+    params = M.init_params(cfg, jax.random.PRNGKey(0), jnp.float32)
+    engine = ContinuousBatcher(cfg, params, max_slots=args.slots,
+                               cache_len=args.cache_len)
+
+    rng = np.random.default_rng(0)
+    reqs = []
+    for i in range(args.requests):
+        prompt = rng.integers(0, cfg.vocab_size,
+                              size=int(rng.integers(5, 30)), dtype=np.int32)
+        r = GenRequest(rid=i, prompt=prompt,
+                       max_new=int(rng.integers(4, 16)))
+        reqs.append(r)
+        engine.submit(r)
+
+    t0 = time.perf_counter()
+    engine.run_to_completion()
+    wall = time.perf_counter() - t0
+    total_new = sum(len(r.generated) for r in reqs)
+    print(f"{args.requests} requests through {args.slots} slots: "
+          f"{engine.n_steps} engine steps, {total_new} tokens, "
+          f"{total_new/wall:.1f} tok/s")
+    for r in reqs:
+        ttft = (r.first_token_s - r.arrival_s) * 1e3
+        e2e = (r.finish_s - r.arrival_s) * 1e3
+        print(f"  req {r.rid}: prompt={len(r.prompt):2d} new={len(r.generated):2d} "
+              f"ttft={ttft:6.0f}ms e2e={e2e:6.0f}ms")
+
+
+if __name__ == "__main__":
+    main()

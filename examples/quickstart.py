@@ -1,0 +1,37 @@
+"""Quickstart: ModiPick in 40 lines.
+
+Runs the paper's model zoo (Table 2) behind the three-stage selection
+policy against the measured campus-WiFi network, and compares SLA
+attainment/accuracy with the greedy baselines.
+
+  PYTHONPATH=src python examples/quickstart.py
+"""
+from repro.core.netmodel import campus_wifi
+from repro.core.policy import DynamicGreedy, ModiPick, StaticGreedy
+from repro.core.simulate import Simulator
+from repro.core.zoo import TABLE2
+
+
+def main():
+    sim = Simulator(entries=TABLE2, network=campus_wifi(), seed=0)
+    print(f"{'SLA(ms)':>8} | {'policy':16} {'attain%':>8} {'top1%':>6} {'lat(ms)':>8}")
+    print("-" * 56)
+    for sla in (100, 115, 150, 200, 250, 300):
+        for policy in (ModiPick(t_threshold=20.0),
+                       DynamicGreedy(),
+                       StaticGreedy(sla)):
+            r = sim.run(policy, sla, n_requests=3000)
+            print(f"{sla:8.0f} | {r.policy:16} {100*r.sla_attainment:8.1f} "
+                  f"{100*r.mean_accuracy:6.1f} {r.mean_latency:8.1f}")
+        print()
+
+    # What ModiPick actually picked at a mid SLA:
+    r = sim.run(ModiPick(t_threshold=20.0), 200.0, 3000)
+    print("model usage @ SLA=200ms:")
+    for name, frac in sorted(r.model_usage.items(), key=lambda kv: -kv[1]):
+        if frac > 0.01:
+            print(f"  {name:22s} {100*frac:5.1f}%")
+
+
+if __name__ == "__main__":
+    main()

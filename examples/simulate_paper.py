@@ -1,0 +1,22 @@
+"""Regenerate every paper experiment (Figs 5–9) as console tables.
+
+  PYTHONPATH=src python examples/simulate_paper.py
+"""
+from benchmarks import paper_figures as pf
+
+
+def main():
+    for name, fn in [("Table 2 (model zoo)", pf.table2_zoo),
+                     ("Fig 3 (on-device vs cloud)", pf.fig3_latency_table),
+                     ("Fig 5 (prototype e2e)", pf.fig5_prototype),
+                     ("Fig 6 (vs static greedy)", pf.fig6_vs_static_greedy),
+                     ("Fig 7 (CV sweep)", pf.fig7_cv_sweep),
+                     ("Fig 8 (usage vs CV)", pf.fig8_usage_vs_cv),
+                     ("Fig 9 (decomposition)", pf.fig9_decomposition)]:
+        print(f"\n=== {name} ===")
+        for row in fn():
+            print(f"  {row[0]:34s} {row[2]}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,197 @@
+"""Model-selection policies: ModiPick's three-stage algorithm (§3.3) plus
+the paper's baselines (§3.2 static/dynamic greedy; §4.4 pure random,
+related random, related accurate).
+
+Every policy implements ``select(store, t_budget, rng) -> model name``.
+Time units are milliseconds throughout, matching the paper.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.profiles import ModelProfile, ProfileStore
+
+EPS = 1e-9
+
+
+def budget(t_sla: float, t_input: float) -> float:
+    """Eq. 1: T_budget = T_sla − 2·T_input (conservative network estimate)."""
+    return t_sla - 2.0 * t_input
+
+
+@dataclass
+class SelectionTrace:
+    """Full decision record (base model, exploration set, probabilities) —
+    used by tests and the decomposition benchmark."""
+    chosen: str
+    base: Optional[str] = None
+    eligible: Tuple[str, ...] = ()
+    probs: Tuple[float, ...] = ()
+    fallback: bool = False
+
+
+class Policy:
+    name = "policy"
+
+    def select(self, store: ProfileStore, t_budget: float,
+               rng: np.random.Generator) -> str:
+        return self.select_traced(store, t_budget, rng).chosen
+
+    def select_traced(self, store: ProfileStore, t_budget: float,
+                      rng: np.random.Generator) -> SelectionTrace:
+        raise NotImplementedError
+
+
+def _fastest(store: ProfileStore) -> str:
+    return min(store.profiles.values(), key=lambda p: p.mu).name
+
+
+def _by_accuracy(store: ProfileStore) -> List[ModelProfile]:
+    return sorted(store.profiles.values(), key=lambda p: -p.accuracy)
+
+
+class StaticGreedy(Policy):
+    """§3.2.1: development-time pick — most accurate model whose average
+    inference time fits the *SLA itself* (no network correction).  The
+    chosen model is frozen at construction time against the dev-time
+    profiles, exactly like a developer hard-coding an endpoint."""
+    name = "static_greedy"
+
+    def __init__(self, t_sla: float):
+        self.t_sla = t_sla
+        self._frozen: Optional[str] = None
+
+    def select_traced(self, store, t_budget, rng) -> SelectionTrace:
+        if self._frozen is None:
+            for p in _by_accuracy(store):
+                if p.mu <= self.t_sla:
+                    self._frozen = p.name
+                    break
+            else:
+                self._frozen = _fastest(store)
+        return SelectionTrace(chosen=self._frozen)
+
+
+class DynamicGreedy(Policy):
+    """§3.2.2: runtime pick — most accurate model with μ ≤ T_budget."""
+    name = "dynamic_greedy"
+
+    def select_traced(self, store, t_budget, rng) -> SelectionTrace:
+        for p in _by_accuracy(store):
+            if p.mu <= t_budget:
+                return SelectionTrace(chosen=p.name)
+        return SelectionTrace(chosen=_fastest(store), fallback=True)
+
+
+class ModiPick(Policy):
+    """The paper's three-stage probabilistic selection (§3.3).
+
+    t_threshold ∈ [0, T_D] controls the exploration window: T_U = T_budget,
+    T_L = T_U − t_threshold.
+
+    gamma: exponent on A(m) in the utility.  gamma=1.0 is Eq. 3 exactly as
+    printed.  Reproduction note (EXPERIMENTS.md §Fig9): with gamma=1 two
+    models sharing a latency profile split probability ∝ accuracy, so the
+    adversarial NasNet-Fictional (A=0.50 vs 0.826) is picked ≈38% of the
+    time — *not* the "low probability" the paper reports.  gamma≈4 recovers
+    the paper's qualitative Fig. 9 behaviour (low-but-nonzero exploration
+    of the fictional model); both settings are benchmarked.
+    """
+    name = "modipick"
+
+    def __init__(self, t_threshold: float, gamma: float = 1.0):
+        assert t_threshold >= 0.0
+        self.t_threshold = t_threshold
+        self.gamma = gamma
+
+    # -- stage 1: greedy base pick (Eq. 2) ------------------------------
+    def _base_model(self, store, t_u, t_l) -> Optional[str]:
+        for p in _by_accuracy(store):
+            if p.mu + p.sigma < t_u and p.mu - p.sigma < t_l:
+                return p.name
+        return None
+
+    # -- stage 2: exploration set --------------------------------------
+    def _eligible(self, store, base: str, t_u, t_l) -> List[str]:
+        bp = store[base]
+        half = abs(t_l - bp.mu) + bp.sigma
+        lo, hi = t_l - half, t_l + half
+        out = []
+        for p in store.profiles.values():
+            if lo <= p.mu <= hi and p.mu + p.sigma < t_u:
+                out.append(p.name)
+        if base not in out:  # base always eligible by construction
+            out.append(base)
+        return out
+
+    # -- stage 3: utility-weighted sampling (Eqs. 3–4) ------------------
+    def _probs(self, store, eligible: Sequence[str], t_u, t_l) -> np.ndarray:
+        u = np.empty(len(eligible))
+        for i, name in enumerate(eligible):
+            p = store[name]
+            num = t_u - (p.mu + p.sigma)  # > 0 by stage-2 constraint
+            den = max(abs(t_l - p.mu), EPS)
+            u[i] = max(p.accuracy, EPS) ** self.gamma * num / den
+        total = u.sum()
+        if not math.isfinite(total) or total <= 0:
+            return np.full(len(eligible), 1.0 / len(eligible))
+        return u / total
+
+    def select_traced(self, store, t_budget, rng) -> SelectionTrace:
+        t_u = t_budget
+        t_l = t_u - self.t_threshold
+        base = self._base_model(store, t_u, t_l)
+        if base is None:
+            # best-effort fallback: fastest model (§3.3.1)
+            return SelectionTrace(chosen=_fastest(store), fallback=True)
+        eligible = self._eligible(store, base, t_u, t_l)
+        probs = self._probs(store, eligible, t_u, t_l)
+        idx = int(rng.choice(len(eligible), p=probs))
+        return SelectionTrace(chosen=eligible[idx], base=base,
+                              eligible=tuple(eligible), probs=tuple(probs))
+
+
+class PureRandom(Policy):
+    """§4.4 stage-1 counterpart: uniform over all managed models."""
+    name = "pure_random"
+
+    def select_traced(self, store, t_budget, rng) -> SelectionTrace:
+        names = store.names()
+        return SelectionTrace(chosen=names[int(rng.integers(len(names)))])
+
+
+class _ExplorationSetPolicy(ModiPick):
+    """Shares ModiPick stages 1–2, replaces stage 3."""
+
+    def _pick_from(self, store, eligible, rng) -> str:
+        raise NotImplementedError
+
+    def select_traced(self, store, t_budget, rng) -> SelectionTrace:
+        t_u = t_budget
+        t_l = t_u - self.t_threshold
+        base = self._base_model(store, t_u, t_l)
+        if base is None:
+            return SelectionTrace(chosen=_fastest(store), fallback=True)
+        eligible = self._eligible(store, base, t_u, t_l)
+        return SelectionTrace(chosen=self._pick_from(store, eligible, rng),
+                              base=base, eligible=tuple(eligible))
+
+
+class RelatedRandom(_ExplorationSetPolicy):
+    """§4.4 stage-3 counterpart: uniform over the exploration set M_E."""
+    name = "related_random"
+
+    def _pick_from(self, store, eligible, rng) -> str:
+        return eligible[int(rng.integers(len(eligible)))]
+
+
+class RelatedAccurate(_ExplorationSetPolicy):
+    """§4.4 stage-3 counterpart: most accurate model in M_E."""
+    name = "related_accurate"
+
+    def _pick_from(self, store, eligible, rng) -> str:
+        return max(eligible, key=lambda n: store[n].accuracy)

@@ -1,0 +1,80 @@
+"""Model performance profiles: EWMA μ/σ per model + cold-model refresh.
+
+Faithful to ModiPick §3.3 "Practical considerations": profiles are
+exponentially-weighted moving averages of observed inference latency, so
+they track drift (co-tenant interference, server load) without unbounded
+history; models not selected recently are flagged for periodic re-probing
+so one bad sample cannot permanently exile an accurate model.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Dict, Iterable, List, Optional
+
+
+@dataclass
+class ModelProfile:
+    name: str
+    accuracy: float            # A(m): quality score in [0, 1]
+    mu: float = 0.0            # EWMA mean inference time (ms)
+    var: float = 0.0           # EWMA variance (ms²)
+    n_obs: int = 0
+    last_selected: int = 0     # request counter at last selection
+
+    @property
+    def sigma(self) -> float:
+        return math.sqrt(max(self.var, 0.0))
+
+    def update(self, latency_ms: float, alpha: float) -> None:
+        if self.n_obs == 0:
+            self.mu = latency_ms
+            self.var = 0.0
+        else:
+            delta = latency_ms - self.mu
+            self.mu += alpha * delta
+            # EW variance (West 1979 incremental form)
+            self.var = (1.0 - alpha) * (self.var + alpha * delta * delta)
+        self.n_obs += 1
+
+
+class ProfileStore:
+    """Pool of model profiles with ModiPick's maintenance rules."""
+
+    def __init__(self, models: Iterable[ModelProfile], *, alpha: float = 0.1,
+                 cold_age: int = 500):
+        self.profiles: Dict[str, ModelProfile] = {m.name: m for m in models}
+        self.alpha = alpha
+        self.cold_age = cold_age
+        self.step = 0
+
+    def names(self) -> List[str]:
+        return list(self.profiles)
+
+    def __getitem__(self, name: str) -> ModelProfile:
+        return self.profiles[name]
+
+    def observe(self, name: str, latency_ms: float) -> None:
+        self.profiles[name].update(latency_ms, self.alpha)
+
+    def mark_selected(self, name: str) -> None:
+        self.step += 1
+        self.profiles[name].last_selected = self.step
+
+    def cold_models(self) -> List[str]:
+        """Models whose profile is stale and due a re-probe."""
+        return [
+            m.name for m in self.profiles.values()
+            if m.n_obs == 0 or (self.step - m.last_selected) > self.cold_age
+        ]
+
+    def warm_up(self, name: str, samples: Iterable[float]) -> None:
+        for s in samples:
+            self.observe(name, s)
+
+    def snapshot(self) -> Dict[str, dict]:
+        return {
+            n: {"mu": p.mu, "sigma": p.sigma, "accuracy": p.accuracy,
+                "n_obs": p.n_obs}
+            for n, p in self.profiles.items()
+        }

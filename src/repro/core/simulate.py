@@ -1,0 +1,110 @@
+"""Closed-loop ModiPick simulator (reproduces the paper's §4 experiments).
+
+Per request: sample the uplink transfer time, compute the budget (Eq. 1),
+let the policy pick a model, sample that model's *true* inference latency,
+feed the observation back into the EWMA profile store, and score SLA
+attainment + accuracy.  Matches the paper's setup of 10k requests per
+(SLA, network) point seeded from the empirical measurements in zoo.py.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence
+
+import numpy as np
+
+from repro.core.netmodel import NetworkModel
+from repro.core.policy import Policy, budget
+from repro.core.profiles import ProfileStore
+from repro.core.zoo import ZooEntry, make_store, true_profiles
+
+
+@dataclass
+class SimResult:
+    policy: str
+    t_sla: float
+    n: int
+    sla_attainment: float       # fraction of requests meeting the SLA
+    mean_accuracy: float        # expected accuracy of selected models
+    mean_latency: float         # end-to-end ms
+    p99_latency: float
+    model_usage: Dict[str, float]  # fraction of requests per model
+
+    @property
+    def violation_rate(self) -> float:
+        return 1.0 - self.sla_attainment
+
+
+@dataclass
+class Simulator:
+    entries: Sequence[ZooEntry]
+    network: NetworkModel
+    seed: int = 0
+    alpha: float = 0.1
+    cold_age: int = 500
+    cold_probe: bool = True
+    # latency-spike process: with prob p, a request takes spike_mult × μ —
+    # models the co-tenant interference the paper motivates exploration with
+    spike_prob: float = 0.0
+    spike_mult: float = 10.0
+
+    def _true_latency(self, rng, entry: ZooEntry) -> float:
+        t = max(0.05, rng.normal(entry.mu_ms, entry.sigma_ms))
+        if self.spike_prob > 0 and rng.random() < self.spike_prob:
+            t *= self.spike_mult
+        return t
+
+    def run(self, policy: Policy, t_sla: float, n_requests: int = 10_000,
+            warm: bool = True, store: Optional[ProfileStore] = None) -> SimResult:
+        rng = np.random.default_rng(self.seed)
+        store = store or make_store(list(self.entries), alpha=self.alpha,
+                                    cold_age=self.cold_age, warm=warm)
+        truth = true_profiles(list(self.entries))
+
+        met = 0
+        acc_sum = 0.0
+        lat: List[float] = []
+        usage: Dict[str, int] = {}
+
+        for _ in range(n_requests):
+            t_input = float(self.network.sample(rng, 1)[0])
+            t_budget = budget(t_sla, t_input)
+            name = policy.select(store, t_budget, rng)
+            store.mark_selected(name)
+            t_inf = self._true_latency(rng, truth[name])
+            store.observe(name, t_inf)
+            # End-to-end: uplink + inference + downlink (≈ uplink is the
+            # conservative 2·T_input estimate; actual downlink is smaller —
+            # we charge half the uplink like a small response).
+            e2e = 2.0 * t_input + t_inf
+            met += e2e <= t_sla
+            acc_sum += truth[name].top1 / 100.0
+            lat.append(e2e)
+            usage[name] = usage.get(name, 0) + 1
+
+            # Cold-model refresh (§3.3 practical considerations): probe one
+            # stale model out-of-band (does not affect request latency).
+            if self.cold_probe:
+                cold = store.cold_models()
+                if cold:
+                    probe = cold[int(rng.integers(len(cold)))]
+                    store.observe(probe, self._true_latency(rng, truth[probe]))
+                    store.profiles[probe].last_selected = store.step
+
+        lat_arr = np.array(lat)
+        return SimResult(
+            policy=policy.name,
+            t_sla=t_sla,
+            n=n_requests,
+            sla_attainment=met / n_requests,
+            mean_accuracy=acc_sum / n_requests,
+            mean_latency=float(lat_arr.mean()),
+            p99_latency=float(np.percentile(lat_arr, 99)),
+            model_usage={k: v / n_requests for k, v in sorted(usage.items())},
+        )
+
+
+def sla_sweep(sim: Simulator, policy_fn, slas: Sequence[float],
+              n_requests: int = 10_000) -> List[SimResult]:
+    """policy_fn(t_sla) -> Policy (static greedy needs the SLA at build)."""
+    return [sim.run(policy_fn(s), s, n_requests) for s in slas]

@@ -1,0 +1,79 @@
+"""Beyond-paper extension: ModiPick over TPU pool configurations.
+
+The paper's pool members are CNNs on one GPU box.  At datacenter scale the
+natural pool is (architecture × mesh slice): the same request can be
+served by a small model on a small slice or a large model on a big slice,
+with latencies that follow from the roofline — which our dry-run derives
+per (arch × shape × mesh) from compiled artifacts.  This module builds a
+ModiPick zoo directly from those artifacts, so the selection policy the
+paper runs over `{MobileNet … NasNet}` runs unchanged over
+`{qwen2@v5e-256 … command-r@v5e-256}`.
+
+Latency model per request (prefill P tokens + emit T tokens):
+  t(m) = prefill_bound(m) · P/P₀ + T · decode_bound(m) + t_dispatch
+with bounds = max(compute, memory, collective) roofline terms from the
+dry-run JSONs; σ from a configurable jitter CV (TPU co-tenancy and ICI
+congestion take the role the paper gives to cloud co-tenants).
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from dataclasses import dataclass
+from typing import Dict, List, Optional
+
+from repro.core.zoo import ZooEntry
+
+DEFAULT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                           "benchmarks", "results", "dryrun")
+
+
+@dataclass(frozen=True)
+class TPUPoolMember:
+    arch: str
+    mesh: str
+    prefill_bound_s: float   # for the 32k-token prefill shape
+    decode_bound_s: float    # per token
+    quality: float
+
+
+def load_pool(results_dir: str = DEFAULT_DIR, mesh: str = "single"
+              ) -> List[TPUPoolMember]:
+    from repro.configs.registry import get_config
+    by_arch: Dict[str, Dict[str, dict]] = {}
+    for f in glob.glob(os.path.join(results_dir, f"*__{mesh}.json")):
+        r = json.load(open(f))
+        if r.get("status") != "ok":
+            continue
+        by_arch.setdefault(r["arch"], {})[r["shape"]] = r
+    pool = []
+    for arch, shapes in sorted(by_arch.items()):
+        if "prefill_32k" not in shapes or "decode_32k" not in shapes:
+            continue
+        pre = shapes["prefill_32k"]["roofline"]
+        dec = shapes["decode_32k"]["roofline"]
+        bound = lambda ro: max(ro["compute_s"], ro["memory_s"], ro["collective_s"])
+        # per-request bounds: prefill is per batch-of-32 32k sequences ⇒
+        # per sequence; decode bound is per step for the whole 128-batch.
+        pool.append(TPUPoolMember(
+            arch=arch, mesh=mesh,
+            prefill_bound_s=bound(pre) / 32.0,
+            decode_bound_s=bound(dec),
+            quality=get_config(arch).quality))
+    return pool
+
+
+def to_zoo(pool: List[TPUPoolMember], *, prefill_tokens: int = 2048,
+           decode_tokens: int = 16, jitter_cv: float = 0.05,
+           dispatch_ms: float = 2.0) -> List[ZooEntry]:
+    """Convert pool members to ModiPick ZooEntries (ms latencies)."""
+    entries = []
+    for m in pool:
+        # scale the 32k prefill bound to the request's prompt length
+        t = (m.prefill_bound_s * (prefill_tokens / 32768.0)
+             + decode_tokens * m.decode_bound_s) * 1e3 + dispatch_ms
+        entries.append(ZooEntry(name=f"{m.arch}@{m.mesh}",
+                                top1=m.quality * 100.0,
+                                mu_ms=t, sigma_ms=t * jitter_cv))
+    return entries

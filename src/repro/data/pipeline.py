@@ -1,0 +1,69 @@
+"""Deterministic synthetic token pipeline.
+
+Design goals of a production input pipeline, miniaturized:
+- deterministic random access: batch at step s is a pure function of
+  (seed, step, host) — so restarts resume exactly and any host can
+  regenerate any shard (elastic re-sharding needs no data state transfer);
+- host sharding: host i of n serves rows i::n of the global batch;
+- checkpointable: state is a single integer step.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, Optional
+
+import numpy as np
+
+
+@dataclass
+class TokenStream:
+    vocab_size: int
+    global_batch: int
+    seq_len: int
+    seed: int = 0
+    host_id: int = 0
+    n_hosts: int = 1
+    step: int = 0
+
+    def __post_init__(self):
+        assert self.global_batch % self.n_hosts == 0
+
+    @property
+    def host_batch(self) -> int:
+        return self.global_batch // self.n_hosts
+
+    def batch_at(self, step: int, host_id: Optional[int] = None) -> Dict[str, np.ndarray]:
+        """Host shard of the global batch at `step`.  The GLOBAL batch is a
+        pure function of (seed, step) — independent of the host topology —
+        so elastic restarts onto a different host count replay the exact
+        same token stream."""
+        host = self.host_id if host_id is None else host_id
+        rng = np.random.default_rng(np.random.SeedSequence([self.seed, step]))
+        tokens = rng.integers(0, self.vocab_size,
+                              size=(self.global_batch, self.seq_len + 1),
+                              dtype=np.int32)
+        hb = self.host_batch
+        shard = tokens[host * hb:(host + 1) * hb]
+        return {"tokens": shard[:, :-1], "targets": shard[:, 1:]}
+
+    def __next__(self) -> Dict[str, np.ndarray]:
+        batch = self.batch_at(self.step)
+        self.step += 1
+        return batch
+
+    def __iter__(self):
+        return self
+
+    # -- checkpointing ---------------------------------------------------
+    def state(self) -> dict:
+        return {"step": self.step, "seed": self.seed}
+
+    def restore(self, state: dict) -> None:
+        assert state["seed"] == self.seed, "seed mismatch on restore"
+        self.step = int(state["step"])
+
+    def reshard(self, host_id: int, n_hosts: int) -> "TokenStream":
+        """Elastic restart onto a different host topology; determinism keeps
+        the global stream identical as long as global_batch divides."""
+        return TokenStream(self.vocab_size, self.global_batch, self.seq_len,
+                           self.seed, host_id, n_hosts, self.step)

@@ -1,0 +1,60 @@
+"""Gradient compression: int8 quantized all-reduce with error feedback.
+
+Used on the slow inter-pod axis where links dominate: gradients are
+quantized to int8 with a per-tensor scale, summed in int32 (no overflow up
+to 2^23 summands), and dequantized.  The quantization residual is carried
+in an error-feedback buffer (Seide et al. / EF-SGD) so the compression
+bias vanishes over steps.  Wire into shard_map over the ``pod`` axis.
+"""
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def quantize_int8(x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    scale = jnp.max(jnp.abs(x)) / 127.0 + 1e-12
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def compressed_psum(x: jax.Array, axis_name: str) -> jax.Array:
+    """int8-compressed all-reduce mean over `axis_name` (inside shard_map)."""
+    n = jax.lax.psum(1, axis_name)
+    q, scale = quantize_int8(x)
+    total = jax.lax.psum(q.astype(jnp.int32), axis_name)
+    # each shard used its own scale; reduce with the max scale bound
+    max_scale = jax.lax.pmax(scale, axis_name)
+    return total.astype(jnp.float32) * max_scale / n
+
+
+def ef_compress(grad: jax.Array, error: jax.Array) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Error-feedback step: corrected = grad + error; returns
+    (int8 payload, scale, new_error)."""
+    corrected = grad.astype(jnp.float32) + error
+    q, scale = quantize_int8(corrected)
+    new_error = corrected - dequantize_int8(q, scale)
+    return q, scale, new_error
+
+
+def ef_compressed_psum_tree(grads: Any, errors: Any, axis_name: str
+                            ) -> Tuple[Any, Any]:
+    """Tree-wise EF-compressed all-reduce mean. Returns (reduced, new_errors)."""
+    n = jax.lax.psum(1, axis_name)
+
+    def one(g, e):
+        q, scale, new_e = ef_compress(g, e)
+        total = jax.lax.psum(q.astype(jnp.int32), axis_name)
+        max_scale = jax.lax.pmax(scale, axis_name)
+        return (total.astype(jnp.float32) * max_scale / n).astype(g.dtype), new_e
+
+    out = jax.tree.map(one, grads, errors)
+    reduced = jax.tree.map(lambda t: t[0], out, is_leaf=lambda v: isinstance(v, tuple))
+    new_err = jax.tree.map(lambda t: t[1], out, is_leaf=lambda v: isinstance(v, tuple))
+    return reduced, new_err

@@ -1,0 +1,173 @@
+"""HLO analysis: collective-bytes extraction + TPU v5e roofline model.
+
+``cost_analysis()`` exposes FLOPs and HBM bytes but not collective
+traffic, so collective bytes are parsed from the post-SPMD HLO text: we
+sum the *operand* sizes of every all-gather / all-reduce / reduce-scatter
+/ all-to-all / collective-permute, with op-specific wire factors
+(all-reduce moves ≈2× its operand on a ring: reduce-scatter + all-gather).
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Dict, List
+
+# --- hardware constants (TPU v5e, per chip) ---------------------------
+PEAK_FLOPS_BF16 = 197e12       # FLOP/s
+HBM_BW = 819e9                 # B/s
+ICI_BW = 50e9                  # B/s per link (≈ per-chip usable here)
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+# `%op.N = TYPE kind(...operands...), ... replica_groups=...`
+# TYPE is a shape or a tuple of shapes; operands carry no inline types in
+# post-optimization HLO, so sizes come from the RESULT type.
+_COLLECTIVE_RE = re.compile(
+    r"=\s*(\([^)]*\)|\w+\[[\d,]*\](?:\{[^}]*\})?)\s*"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(-start)?\(")
+_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _shape_bytes(type_str: str) -> int:
+    m = _SHAPE_RE.match(type_str.strip())
+    if not m:
+        return 0
+    dtype, dims = m.groups()
+    nbytes = _DTYPE_BYTES.get(dtype)
+    if nbytes is None:
+        return 0
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * nbytes
+
+
+def _result_bytes(type_str: str, is_start: bool) -> int:
+    type_str = type_str.strip()
+    if type_str.startswith("("):
+        parts = [p for p in type_str[1:-1].split(",") if "[" in p]
+        sizes = [_shape_bytes(p) for p in parts]
+        if not sizes:
+            return 0
+        # async -start ops: (operand, destination, ...) — use the destination
+        return sizes[1] if is_start and len(sizes) > 1 else max(sizes)
+    return _shape_bytes(type_str)
+
+
+@dataclass
+class CollectiveStats:
+    # wire bytes PER CHIP (ring-algorithm estimates from result sizes)
+    by_kind: Dict[str, float] = field(default_factory=dict)
+    by_kind_count: Dict[str, int] = field(default_factory=dict)
+
+    @property
+    def total_bytes(self) -> float:
+        return sum(self.by_kind.values())
+
+
+def collective_bytes(hlo_text: str) -> CollectiveStats:
+    """Per-chip wire-byte estimate per collective, ring algorithms:
+    all-gather: recv ≈ result·(n-1)/n; all-reduce: ≈ 2·size·(n-1)/n;
+    reduce-scatter: send ≈ result·(n-1); all-to-all: ≈ result·(n-1)/n;
+    collective-permute: result."""
+    stats = CollectiveStats()
+    for line in hlo_text.splitlines():
+        m = _COLLECTIVE_RE.search(line)
+        if not m:
+            continue
+        type_str, kind, start = m.group(1), m.group(2), m.group(3)
+        size = _result_bytes(type_str, start is not None)
+        gm = _GROUPS_RE.search(line)
+        n = int(gm.group(2)) if gm else 2
+        frac = (n - 1) / n
+        if kind == "all-reduce":
+            wire = 2.0 * size * frac
+        elif kind == "all-gather":
+            wire = size * frac
+        elif kind == "reduce-scatter":
+            wire = size * (n - 1)
+        elif kind == "all-to-all":
+            wire = size * frac
+        else:  # collective-permute
+            wire = size
+        stats.by_kind[kind] = stats.by_kind.get(kind, 0.0) + wire
+        stats.by_kind_count[kind] = stats.by_kind_count.get(kind, 0) + 1
+    return stats
+
+
+# ----------------------------------------------------------------------
+@dataclass
+class Roofline:
+    n_chips: int
+    hlo_flops: float            # whole-program FLOPs (all chips)
+    hlo_bytes: float            # whole-program HBM bytes
+    coll_bytes_per_chip: float  # wire bytes per chip
+    model_flops: float          # analytic 6·N·D (active params)
+
+    @property
+    def compute_s(self) -> float:
+        return self.hlo_flops / (self.n_chips * PEAK_FLOPS_BF16)
+
+    @property
+    def memory_s(self) -> float:
+        return self.hlo_bytes / (self.n_chips * HBM_BW)
+
+    @property
+    def collective_s(self) -> float:
+        return self.coll_bytes_per_chip / ICI_BW
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def step_s(self) -> float:
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        return self.model_flops / self.hlo_flops if self.hlo_flops else 0.0
+
+    @property
+    def mfu(self) -> float:
+        """Model FLOPs utilization at the roofline bound."""
+        if self.step_s <= 0:
+            return 0.0
+        return self.model_flops / (self.step_s * self.n_chips * PEAK_FLOPS_BF16)
+
+    def to_dict(self) -> dict:
+        return {
+            "n_chips": self.n_chips,
+            "hlo_flops": self.hlo_flops,
+            "hlo_bytes": self.hlo_bytes,
+            "coll_bytes_per_chip": self.coll_bytes_per_chip,
+            "model_flops": self.model_flops,
+            "compute_s": self.compute_s,
+            "memory_s": self.memory_s,
+            "collective_s": self.collective_s,
+            "dominant": self.dominant,
+            "useful_flops_ratio": self.useful_flops_ratio,
+            "mfu_bound": self.mfu,
+        }
+
+
+def model_flops_for(cfg, shape) -> float:
+    """Analytic MODEL_FLOPS: 6·N_active·D for train, 2·N_active·D for a
+    forward-only phase (prefill), 2·N_active·B for one decode token."""
+    n_active = cfg.active_param_count()
+    if shape.mode == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n_active * tokens
+    if shape.mode == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n_active * tokens
+    return 2.0 * n_active * shape.global_batch  # decode: one token/seq

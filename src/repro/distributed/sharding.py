@@ -1,0 +1,107 @@
+"""Logical-axis-rule sharding (MaxText-style).
+
+Model code annotates activations/params with *logical* axis names; a rules
+table (installed per run via :func:`axis_rules`) maps logical names to mesh
+axes.  Outside any rules context every annotation is the identity, so the
+same model code runs unsharded on CPU tests and fully sharded in the
+dry-run / production launchers.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Dict, Optional, Sequence, Tuple, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+MeshAxes = Union[None, str, Tuple[str, ...]]
+
+_STATE = threading.local()
+
+
+def current_rules() -> Optional[Dict[str, MeshAxes]]:
+    return getattr(_STATE, "rules", None)
+
+
+def current_mesh() -> Optional[Mesh]:
+    return getattr(_STATE, "mesh", None)
+
+
+@contextlib.contextmanager
+def axis_rules(rules: Dict[str, MeshAxes], mesh: Optional[Mesh] = None):
+    prev_rules = getattr(_STATE, "rules", None)
+    prev_mesh = getattr(_STATE, "mesh", None)
+    _STATE.rules = dict(rules)
+    _STATE.mesh = mesh
+    try:
+        yield
+    finally:
+        _STATE.rules = prev_rules
+        _STATE.mesh = prev_mesh
+
+
+def logical_to_spec(
+    logical_axes: Sequence[Optional[str]],
+    rules: Optional[Dict[str, MeshAxes]] = None,
+    *,
+    shape: Optional[Sequence[int]] = None,
+    mesh: Optional[Mesh] = None,
+) -> P:
+    """Map logical axis names to a PartitionSpec.
+
+    If ``shape``+``mesh`` are given, any mapping whose axis size does not
+    divide the dim is dropped (divisibility-aware fallback) and duplicate
+    mesh axes are dropped left-to-right.
+    """
+    rules = rules if rules is not None else (current_rules() or {})
+    mesh = mesh if mesh is not None else current_mesh()
+    used = set()
+    out = []
+    for i, name in enumerate(logical_axes):
+        assignment = rules.get(name) if name else None
+        if assignment is None:
+            out.append(None)
+            continue
+        axes = (assignment,) if isinstance(assignment, str) else tuple(assignment)
+        axes = tuple(a for a in axes if a not in used)
+        if mesh is not None and shape is not None:
+            total = 1
+            kept = []
+            for a in axes:
+                n = mesh.shape[a]
+                if shape[i] % (total * n) == 0:
+                    kept.append(a)
+                    total *= n
+            axes = tuple(kept)
+        if not axes:
+            out.append(None)
+            continue
+        used.update(axes)
+        out.append(axes[0] if len(axes) == 1 else axes)
+    return P(*out)
+
+
+def shard(x: jax.Array, *logical_axes: Optional[str]) -> jax.Array:
+    """Annotate an activation with logical axes (no-op without rules)."""
+    rules = current_rules()
+    if rules is None:
+        return x
+    spec = logical_to_spec(logical_axes, rules, shape=x.shape, mesh=current_mesh())
+    return jax.lax.with_sharding_constraint(x, spec)
+
+
+def tree_specs(axes_tree, rules, mesh, shapes_tree) -> "jax.tree_util.PyTreeDef":
+    """Map a pytree of logical-axes tuples + shapes to PartitionSpecs."""
+    return jax.tree.map(
+        lambda ax, shp: logical_to_spec(ax, rules, shape=shp.shape, mesh=mesh),
+        axes_tree,
+        shapes_tree,
+        is_leaf=lambda v: isinstance(v, tuple) and all(isinstance(e, (str, type(None))) for e in v),
+    )
+
+
+def tree_shardings(axes_tree, rules, mesh, shapes_tree):
+    specs = tree_specs(axes_tree, rules, mesh, shapes_tree)
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), specs,
+                        is_leaf=lambda v: isinstance(v, P))

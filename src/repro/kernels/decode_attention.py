@@ -1,0 +1,103 @@
+"""Flash-decode Pallas TPU kernel: one new token attending over a KV cache.
+
+TPU adaptation: at q_len=1 a naive kernel would waste the MXU (1×hd tiles),
+so the whole GQA *q-head group* is packed into the sublane dim — the block
+is (group, hd) × (bk, hd), an MXU-shaped matmul.  The grid walks KV blocks
+(innermost, sequential) carrying online-softmax state in fp32 VMEM scratch;
+per-sequence lengths arrive via scalar prefetch so fully-invalid KV blocks
+(beyond `pos`) are skipped without issuing compute.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _decode_kernel(pos_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
+                   *, bk: int, nk: int, group: int, scale: float,
+                   window: int):
+    b = pl.program_id(0)
+    ik = pl.program_id(2)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    pos = pos_ref[b]
+    k_start = ik * bk
+    live = k_start <= pos  # no valid slot beyond the write position
+    if window > 0:
+        live = jnp.logical_and(live, k_start + bk - 1 > pos - window)
+
+    @pl.when(live)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)  # (group, hd)
+        k = k_ref[0, 0].astype(jnp.float32)  # (bk, hd)
+        v = v_ref[0, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        kj = k_start + jax.lax.broadcasted_iota(jnp.int32, (group, bk), 1)
+        mask = kj <= pos
+        if window > 0:
+            mask = jnp.logical_and(mask, kj > pos - window)
+        s = jnp.where(mask, s, NEG_INF)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        alpha = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(ik == nk - 1)
+    def _finalize():
+        denom = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, 0] = (acc_ref[...] / denom).astype(o_ref.dtype)
+
+
+def decode_attention(q, k, v, pos, *, window: int = 0, block_k: int = 128,
+                     interpret: bool = False):
+    """q: (B, KV, group, hd) — new-token queries grouped per kv head;
+    k, v: (B, KV, S, hd) cache (the new token's k/v already written);
+    pos: (B,) int32 absolute position of the new token.
+
+    Returns (B, KV, group, hd).
+    """
+    B, KV, group, hd = q.shape
+    S = k.shape[2]
+    bk = min(block_k, S)
+    assert S % bk == 0
+    nk = S // bk
+
+    kernel = functools.partial(_decode_kernel, bk=bk, nk=nk, group=group,
+                               scale=hd ** -0.5, window=window)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(B, KV, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1, group, hd), lambda b, h, j, pos_ref: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, bk, hd), lambda b, h, j, pos_ref: (b, h, j, 0)),
+            pl.BlockSpec((1, 1, bk, hd), lambda b, h, j, pos_ref: (b, h, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, group, hd), lambda b, h, j, pos_ref: (b, h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((group, 1), jnp.float32),
+            pltpu.VMEM((group, 1), jnp.float32),
+            pltpu.VMEM((group, hd), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, KV, group, hd), q.dtype),
+        interpret=interpret,
+    )(pos, q, k, v)

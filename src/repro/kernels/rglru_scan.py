@@ -1,0 +1,70 @@
+"""RG-LRU linear-recurrence Pallas TPU kernel.
+
+h_t = a_t · h_{t-1} + b_t, elementwise over channels.  The channel dim
+rides the 128-lane axis; the sequence is blocked on the sublane axis with
+the carry state in fp32 VMEM scratch across sequence blocks (innermost
+sequential grid dim).  Inside a block the recurrence runs as a log-depth
+Blelloch-style doubling scan on VMEM values — O(log bs) vector ops instead
+of bs sequential steps, which is the VPU-friendly formulation (there is no
+MXU work in this kernel).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _rglru_kernel(a_ref, b_ref, h_ref, carry_ref, *, bs: int):
+    ib = pl.program_id(1)
+
+    @pl.when(ib == 0)
+    def _init():
+        carry_ref[...] = jnp.zeros_like(carry_ref)
+
+    a = a_ref[0].astype(jnp.float32)  # (bs, W)
+    b = b_ref[0].astype(jnp.float32)
+
+    # Inclusive scan of the affine maps h ← a·h + b via doubling:
+    # (a, b) ∘ (a', b') = (a·a', b·a' + b')  — log2(bs) rounds.
+    steps = max(1, bs.bit_length() - 1)
+    av, bv = a, b
+    shift = 1
+    for _ in range(steps):
+        a_sh = jnp.concatenate([jnp.ones((shift, av.shape[1]), jnp.float32),
+                                av[:-shift]], axis=0)
+        b_sh = jnp.concatenate([jnp.zeros((shift, bv.shape[1]), jnp.float32),
+                                bv[:-shift]], axis=0)
+        bv = b_sh * av + bv
+        av = a_sh * av
+        shift *= 2
+
+    h0 = carry_ref[...]  # (1, W) state entering this block
+    h = bv + av * h0
+    carry_ref[...] = h[-1:]
+    h_ref[0] = h.astype(h_ref.dtype)
+
+
+def rglru_scan(a, b, *, block_s: int = 256, interpret: bool = False):
+    """a, b: (B, S, W) — returns h: (B, S, W) with h_t = a_t h_{t-1} + b_t."""
+    B, S, W = a.shape
+    bs = min(block_s, S)
+    assert S % bs == 0 and (bs & (bs - 1)) == 0, "block must be a power of two"
+    nb = S // bs
+
+    kernel = functools.partial(_rglru_kernel, bs=bs)
+    return pl.pallas_call(
+        kernel,
+        grid=(B, nb),
+        in_specs=[
+            pl.BlockSpec((1, bs, W), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, bs, W), lambda i, j: (i, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bs, W), lambda i, j: (i, j, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, S, W), a.dtype),
+        scratch_shapes=[pltpu.VMEM((1, W), jnp.float32)],
+        interpret=interpret,
+    )(a, b)

@@ -1,0 +1,30 @@
+"""Production mesh builders.
+
+Defined as functions (never module-level constants) so importing this
+module never touches jax device state.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """Single pod: (data=16, model=16) = 256 chips (v5e-256-like).
+    Multi-pod: (pod=2, data=16, model=16) = 512 chips across DCN."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_mesh(shape, axes):
+    """Arbitrary mesh for debug runs (e.g. (2, 4) on 8 fake devices)."""
+    return jax.make_mesh(tuple(shape), tuple(axes))
+
+
+def mesh_axis(mesh, name: str) -> int:
+    return mesh.shape.get(name, 1)
+
+
+def data_axes(mesh):
+    """The data-parallel axes present in this mesh ('pod' + 'data')."""
+    return tuple(a for a in ("pod", "data") if a in mesh.shape)

@@ -1,0 +1,57 @@
+"""Training launcher.
+
+  PYTHONPATH=src python -m repro.launch.train --arch qwen2-1.5b --reduced \
+      --steps 50 --ckpt-dir /tmp/ckpt
+
+Full-size configs on the production mesh are exercised via dryrun.py (this
+container is CPU-only); this launcher runs real steps on whatever devices
+exist, with the same config/checkpoint machinery.
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax.numpy as jnp
+
+from repro.configs.base import TrainConfig
+from repro.configs.registry import ARCH_IDS, get_config
+from repro.data.pipeline import TokenStream
+from repro.training.loop import TrainLoop
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True, choices=ARCH_IDS)
+    ap.add_argument("--reduced", action="store_true",
+                    help="CPU-sized same-family config")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--grad-accum", type=int, default=1)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    tcfg = TrainConfig(learning_rate=args.lr, total_steps=args.steps,
+                       warmup_steps=max(5, args.steps // 10),
+                       grad_accum=args.grad_accum, seed=args.seed)
+    stream = TokenStream(cfg.vocab_size, args.batch, args.seq, seed=args.seed)
+    loop = TrainLoop(cfg, tcfg, ckpt_dir=args.ckpt_dir,
+                     ckpt_every=args.ckpt_every, dtype=jnp.float32)
+
+    def on_step(step, m):
+        if step % 10 == 0:
+            print(f"step {step:5d} loss={m['loss']:.4f} "
+                  f"gnorm={m['grad_norm']:.3f} {m['step_time_s']*1e3:.0f}ms")
+
+    final = loop.run(stream, args.steps, on_step=on_step)
+    print("final:", {k: round(float(v), 4) for k, v in final.items()})
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,89 @@
+"""Public model API: input specs (ShapeDtypeStruct stand-ins for the
+dry-run) and the three lowered step kinds (train / prefill / decode)."""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import model as M
+
+
+def _act_dtype(cfg: ModelConfig):
+    return jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+
+
+def batch_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    """ShapeDtypeStructs for one forward batch (train/prefill modes).
+
+    [audio]/[vlm] archs receive precomputed frame/patch embeddings from the
+    stub frontend as additional inputs."""
+    B, S = shape.global_batch, shape.seq_len
+    specs: Dict[str, Any] = {}
+    if cfg.vlm is not None:
+        n_img = cfg.vlm.n_image_tokens
+        specs["tokens"] = jax.ShapeDtypeStruct((B, S - n_img), jnp.int32)
+        specs["image_embeds"] = jax.ShapeDtypeStruct((B, n_img, cfg.d_model), _act_dtype(cfg))
+    elif cfg.encdec is not None:
+        specs["tokens"] = jax.ShapeDtypeStruct((B, S), jnp.int32)
+        specs["frames"] = jax.ShapeDtypeStruct((B, cfg.encdec.n_frames, cfg.d_model), _act_dtype(cfg))
+    else:
+        specs["tokens"] = jax.ShapeDtypeStruct((B, S), jnp.int32)
+    if shape.mode == "train":
+        specs["targets"] = jax.ShapeDtypeStruct(specs["tokens"].shape, jnp.int32)
+    return specs
+
+
+def decode_input_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    """Decode-step inputs: one new token per sequence + KV/state cache of
+    length seq_len."""
+    from repro.models.layers import abstract
+    B = shape.global_batch
+    cache = M.cache_template(cfg, B, shape.seq_len)
+    cache_specs = abstract(cache, _act_dtype(cfg))
+    return {
+        "tokens": jax.ShapeDtypeStruct((B,), jnp.int32),
+        "pos": jax.ShapeDtypeStruct((B,), jnp.int32),
+        "cache": cache_specs,
+    }
+
+
+def param_specs(cfg: ModelConfig) -> Any:
+    from repro.models.layers import abstract
+    return abstract(M.param_template(cfg), _act_dtype(cfg))
+
+
+# ----------------------------------------------------------------------
+# Step functions (what the launchers jit)
+# ----------------------------------------------------------------------
+def make_forward_loss(cfg: ModelConfig, remat: bool = False):
+    def loss_fn(params, batch):
+        return M.forward_train(cfg, params, batch, remat=remat)
+    return loss_fn
+
+
+def make_prefill_step(cfg: ModelConfig, cache_len: int):
+    def prefill_step(params, batch):
+        return M.prefill(cfg, params, batch, cache_len)
+    return prefill_step
+
+
+def make_serve_step(cfg: ModelConfig):
+    def serve_step(params, cache, tokens, pos):
+        return M.decode_step(cfg, params, cache, tokens, pos)
+    return serve_step
+
+
+def make_train_batch(cfg: ModelConfig, shape: ShapeConfig, key) -> Dict[str, Any]:
+    """Random concrete batch (for smokes/benchmarks on CPU)."""
+    specs = batch_specs(cfg, shape)
+    out = {}
+    for name, spec in specs.items():
+        key, k = jax.random.split(key)
+        if spec.dtype == jnp.int32:
+            out[name] = jax.random.randint(k, spec.shape, 0, cfg.vocab_size, jnp.int32)
+        else:
+            out[name] = jax.random.normal(k, spec.shape, jnp.float32).astype(spec.dtype) * 0.02
+    return out

@@ -1,0 +1,27 @@
+"""Runtime lowering flags (used by the dry-run's scan calibration).
+
+XLA's ``cost_analysis()`` visits a while-loop body once, so scanned-layer
+programs under-report FLOPs/collectives by the trip count.  The dry-run
+therefore compiles shallow *unrolled* variants (1 and 2 pattern
+repetitions) to measure the exact per-repetition delta, then corrects the
+full-depth numbers.  These flags switch every internal ``lax.scan`` /
+``lax.map`` to a Python loop for those calibration builds only.
+"""
+from __future__ import annotations
+
+import contextlib
+
+UNROLL_SCANS = False
+Q_CHUNK_OVERRIDE = None   # larger q-chunks keep unrolled HLO small
+KV_CHUNK_OVERRIDE = None  # ditto for the online-softmax kv loop
+
+
+@contextlib.contextmanager
+def unrolled(q_chunk: int | None = None, kv_chunk: int | None = None):
+    global UNROLL_SCANS, Q_CHUNK_OVERRIDE, KV_CHUNK_OVERRIDE
+    prev = (UNROLL_SCANS, Q_CHUNK_OVERRIDE, KV_CHUNK_OVERRIDE)
+    UNROLL_SCANS, Q_CHUNK_OVERRIDE, KV_CHUNK_OVERRIDE = True, q_chunk, kv_chunk
+    try:
+        yield
+    finally:
+        UNROLL_SCANS, Q_CHUNK_OVERRIDE, KV_CHUNK_OVERRIDE = prev

@@ -1,0 +1,248 @@
+"""Mamba-2 SSD (state-space duality) mixer.
+
+The XLA path implements the chunked SSD algorithm (intra-chunk quadratic
+term + inter-chunk state recurrence via associative scan); the TPU Pallas
+kernel in ``repro.kernels.ssd_scan`` fuses the same computation per chunk.
+Decode maintains O(1) state: conv ring + (H, hd, N) SSM state.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import shard
+from repro.models.layers import ParamSpec
+
+
+def _dims(cfg: ModelConfig):
+    s = cfg.ssm
+    d_in = s.d_inner(cfg.d_model)
+    H = s.n_heads(cfg.d_model)
+    return s, d_in, H
+
+
+def ssd_template(cfg: ModelConfig) -> dict:
+    """Separate projection matrices per stream (z, x, B, C, dt).
+
+    A fused in_proj looks natural but TP-shards its output dim and then
+    *slices* it at stream boundaries that don't align to the shards —
+    GSPMD repairs that with halo collective-permutes (observed: 86 GiB/chip
+    on mamba2 train_4k).  Separate matmuls give each stream its own clean
+    sharding; same math, same parameter count."""
+    s, d_in, H = _dims(cfg)
+    d = cfg.d_model
+    n = s.n_groups * s.d_state
+    return {
+        "in_z": ParamSpec((d, d_in), ("embed_fsdp", "heads_merged")),
+        "in_x": ParamSpec((d, d_in), ("embed_fsdp", "heads_merged")),
+        "in_B": ParamSpec((d, n), ("embed_fsdp", None)),
+        "in_C": ParamSpec((d, n), ("embed_fsdp", None)),
+        "in_dt": ParamSpec((d, H), ("embed_fsdp", "heads")),
+        "conv_x_w": ParamSpec((s.conv_width, d_in), (None, "heads_merged")),
+        "conv_x_b": ParamSpec((d_in,), ("heads_merged",), "zeros"),
+        "conv_B_w": ParamSpec((s.conv_width, n), (None, None)),
+        "conv_B_b": ParamSpec((n,), (None,), "zeros"),
+        "conv_C_w": ParamSpec((s.conv_width, n), (None, None)),
+        "conv_C_b": ParamSpec((n,), (None,), "zeros"),
+        "A_log": ParamSpec((H,), (None,), "ones"),
+        "D": ParamSpec((H,), (None,), "ones"),
+        "dt_bias": ParamSpec((H,), (None,), "zeros"),
+        "norm_z": ParamSpec((d_in,), (None,), "zeros"),
+        "out_proj": ParamSpec((d_in, d), ("heads_merged", "embed_fsdp"), "normal_out", 0),
+    }
+
+
+def _causal_conv(x, w, b):
+    """x: (B,S,C), w: (W,C) depthwise causal conv."""
+    W = w.shape[0]
+    xp = jnp.pad(x, [(0, 0), (W - 1, 0), (0, 0)])
+    out = sum(xp[:, i:i + x.shape[1]] * w[i] for i in range(W))
+    return jax.nn.silu(out + b)
+
+
+def ssd_chunked(xh, dt, A, B_, C_, chunk, return_final_state=False):
+    """Chunked SSD. xh: (B,S,H,P), dt: (B,S,H) (post-softplus), A: (H,) (<0),
+    B_,C_: (B,S,G,N) shared across the H//G heads of each group.
+    Returns y: (B,S,H,P) (and the final (B,H,P,N) state if requested).
+    All decay math in fp32.
+    """
+    Bb, S, H, P = xh.shape
+    G = B_.shape[2]
+    hg = H // G
+    cs = min(chunk, S)
+    if S % cs:  # pad to a chunk multiple; dt=0 ⇒ padded tokens are inert
+        pad = cs - S % cs
+        xh = jnp.pad(xh, [(0, 0), (0, pad), (0, 0), (0, 0)])
+        dt = jnp.pad(dt, [(0, 0), (0, pad), (0, 0)])
+        B_ = jnp.pad(B_, [(0, 0), (0, pad), (0, 0), (0, 0)])
+        C_ = jnp.pad(C_, [(0, 0), (0, pad), (0, 0), (0, 0)])
+        y = ssd_chunked(xh, dt, A, B_, C_, chunk, return_final_state)
+        if return_final_state:
+            return y[0][:, :S], y[1]
+        return y[:, :S]
+    nc = S // cs
+
+    dtA = (dt.astype(jnp.float32) * A).reshape(Bb, nc, cs, G, hg)
+    dtA = shard(dtA, "batch", None, None, None, "heads")
+    cum = jnp.cumsum(dtA, axis=2)  # (B,nc,cs,G,hg) running log-decay
+    total = cum[:, :, -1]  # (B,nc,G,hg)
+
+    # Keep the big operands (x, B, C) in their storage dtype — fp32 happens
+    # inside the matmul accumulators (preferred_element_type), not via
+    # materialized fp32 copies of (B,S,d_inner)-sized tensors.
+    xs = xh.reshape(Bb, nc, cs, G, hg, P)
+    xs = shard(xs, "batch", None, None, None, "heads", None)
+    dts = dt.reshape(Bb, nc, cs, G, hg).astype(jnp.float32)
+    dts = shard(dts, "batch", None, None, None, "heads")
+    Bs = B_.reshape(Bb, nc, cs, G, -1)
+    Cs = C_.reshape(Bb, nc, cs, G, -1)
+
+    # ---- intra-chunk (quadratic within chunk) --------------------------
+    # scores shared per group; decay L per head.
+    scores = jnp.einsum("bcign,bcjgn->bcgij", Cs, Bs,
+                        preferred_element_type=jnp.float32)  # (B,nc,G,i,j)
+    L = jnp.exp(jnp.clip(cum[:, :, :, None] - cum[:, :, None, :], -60.0, 0.0))
+    # L: (B,nc,i,j,G,hg); apply causal mask.  NB: the head-sharded dim is
+    # hg (the last), not G — annotating G here replicates L and triggers
+    # per-layer all-gathers (observed: 553 GiB/chip on mamba2 train).
+    causal = jnp.tril(jnp.ones((cs, cs), jnp.float32))
+    L = L * causal[None, None, :, :, None, None]
+    L = shard(L, "batch", None, None, None, None, "heads")
+    M = scores.transpose(0, 1, 3, 4, 2)[..., None] * L \
+        * dts[:, :, None, :, :, :]  # (B,nc,i,j,G,hg)
+    M = shard(M, "batch", None, None, None, None, "heads")
+    y_intra = jnp.einsum("bcijgh,bcjghp->bcighp", M, xs,
+                         preferred_element_type=jnp.float32)
+
+    # ---- chunk states ----------------------------------------------------
+    decay_to_end = jnp.exp(jnp.clip(total[:, :, None] - cum, -60.0, 0.0))
+    states = jnp.einsum("bcjgh,bcjgn,bcjghp->bcghpn",
+                        dts * decay_to_end, Bs, xs,
+                        preferred_element_type=jnp.float32)  # (B,nc,G,hg,P,N)
+    states = shard(states, "batch", None, None, "heads", None, None)
+
+    # ---- inter-chunk recurrence (associative scan over chunks) ---------
+    chunk_decay = jnp.exp(jnp.clip(total, -60.0, 0.0))  # (B,nc,G,hg)
+
+    def combine(a, b):
+        da, sa = a
+        db, sb = b
+        return da * db, sa * db[..., None, None] + sb
+
+    _, st_scan = jax.lax.associative_scan(combine, (chunk_decay, states), axis=1)
+    st_prev = jnp.concatenate(
+        [jnp.zeros_like(st_scan[:, :1]), st_scan[:, :-1]], axis=1)
+
+    decay_in = jnp.exp(jnp.clip(cum, -60.0, 0.0))  # (B,nc,cs,G,hg)
+    y_inter = jnp.einsum("bcign,bcghpn,bcigh->bcighp", Cs, st_prev, decay_in,
+                         preferred_element_type=jnp.float32)
+
+    y = (y_intra + y_inter).reshape(Bb, S, H, P)
+    if return_final_state:
+        final = st_scan[:, -1].reshape(Bb, H, P, -1)
+        return y.astype(xh.dtype), final
+    return y.astype(xh.dtype)
+
+
+def ssd_block_apply(params, x, cfg: ModelConfig, return_cache: bool = False):
+    """Full-sequence SSD mixer. x: (B,S,D) → (B,S,D) [, decode cache]."""
+    s, d_in, H = _dims(cfg)
+    z = jnp.einsum("bsd,dp->bsp", x, params["in_z"])
+    xc = jnp.einsum("bsd,dp->bsp", x, params["in_x"])
+    B_ = jnp.einsum("bsd,dn->bsn", x, params["in_B"])
+    C_ = jnp.einsum("bsd,dn->bsn", x, params["in_C"])
+    dt = jnp.einsum("bsd,dh->bsh", x, params["in_dt"])
+    xc = shard(xc, "batch", "seq", "heads_merged")
+    if return_cache:
+        conv_hist = {
+            "x": xc[:, -(s.conv_width - 1):],
+            "B": B_[:, -(s.conv_width - 1):],
+            "C": C_[:, -(s.conv_width - 1):],
+        }
+    xc = _causal_conv(xc, params["conv_x_w"], params["conv_x_b"])
+    B_ = _causal_conv(B_, params["conv_B_w"], params["conv_B_b"])
+    C_ = _causal_conv(C_, params["conv_C_w"], params["conv_C_b"])
+    Bb, S = x.shape[:2]
+    xh = xc.reshape(Bb, S, H, s.head_dim)
+    xh = shard(xh, "batch", "seq", "heads", None)
+    B_ = B_.reshape(Bb, S, s.n_groups, s.d_state)
+    C_ = C_.reshape(Bb, S, s.n_groups, s.d_state)
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))
+    dt_sp = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])
+    if return_cache:
+        y, final_state = ssd_chunked(xh, dt_sp, A, B_, C_, s.chunk_size,
+                                     return_final_state=True)
+    else:
+        y = ssd_chunked(xh, dt_sp, A, B_, C_, s.chunk_size)
+    y = y + xh * params["D"].astype(xh.dtype)[None, None, :, None]
+    y = y.reshape(Bb, S, d_in)
+    # gated RMSNorm (mamba2): norm(y) * silu(z)
+    yf = y.astype(jnp.float32) * jax.nn.silu(z.astype(jnp.float32))
+    var = jnp.mean(yf * yf, axis=-1, keepdims=True)
+    yf = yf * jax.lax.rsqrt(var + 1e-6) * (1.0 + params["norm_z"].astype(jnp.float32))
+    y = yf.astype(x.dtype)
+    out = jnp.einsum("bsp,pd->bsd", y, params["out_proj"])
+    if return_cache:
+        cache = dict(conv_hist, state=final_state.astype(x.dtype))
+        return out, cache
+    return out
+
+
+# ----------------------------------------------------------------------
+# Decode path: O(1) state
+# ----------------------------------------------------------------------
+def ssd_cache_template(cfg: ModelConfig, batch: int) -> dict:
+    s, d_in, H = _dims(cfg)
+    n = s.n_groups * s.d_state
+    w = s.conv_width - 1
+    return {
+        "x": ParamSpec((batch, w, d_in), ("batch", None, "heads_merged"), "zeros"),
+        "B": ParamSpec((batch, w, n), ("batch", None, None), "zeros"),
+        "C": ParamSpec((batch, w, n), ("batch", None, None), "zeros"),
+        "state": ParamSpec((batch, H, s.head_dim, s.d_state),
+                           ("batch", "heads", None, None), "zeros"),
+    }
+
+
+def _conv_step(hist, new, w, b):
+    """One causal-conv decode step; returns (out (B,C), new_hist)."""
+    h = jnp.concatenate([hist, new[:, None]], axis=1)  # (B, W, C)
+    return jnp.einsum("bwc,wc->bc", h, w) + b, h[:, 1:]
+
+
+def ssd_decode_step(params, cache, x, cfg: ModelConfig):
+    """x: (B,1,D). Returns (out (B,1,D), new_cache)."""
+    s, d_in, H = _dims(cfg)
+    z = jnp.einsum("bsd,dp->bsp", x, params["in_z"])[:, 0]
+    xc = jnp.einsum("bsd,dp->bsp", x, params["in_x"])[:, 0]
+    B_ = jnp.einsum("bsd,dn->bsn", x, params["in_B"])[:, 0]
+    C_ = jnp.einsum("bsd,dn->bsn", x, params["in_C"])[:, 0]
+    dt = jnp.einsum("bsd,dh->bsh", x, params["in_dt"])[:, 0]
+    xc, new_x = _conv_step(cache["x"], xc, params["conv_x_w"], params["conv_x_b"])
+    B_, new_B = _conv_step(cache["B"], B_, params["conv_B_w"], params["conv_B_b"])
+    C_, new_C = _conv_step(cache["C"], C_, params["conv_C_w"], params["conv_C_b"])
+    xc = jax.nn.silu(xc)
+    B_ = jax.nn.silu(B_).reshape(-1, s.n_groups, s.d_state)
+    C_ = jax.nn.silu(C_).reshape(-1, s.n_groups, s.d_state)
+    xh = xc.reshape(-1, H, s.head_dim)
+
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))
+    dt_sp = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])  # (B,H)
+    decay = jnp.exp(dt_sp * A)  # (B,H)
+    hg = H // s.n_groups
+    Bh = jnp.repeat(B_, hg, axis=1).astype(jnp.float32)  # (B,H,N)
+    Ch = jnp.repeat(C_, hg, axis=1).astype(jnp.float32)
+    upd = (dt_sp[..., None, None] * xh.astype(jnp.float32)[..., None]
+           * Bh[:, :, None, :])  # (B,H,P,N)
+    new_state = cache["state"].astype(jnp.float32) * decay[..., None, None] + upd
+    y = jnp.einsum("bhpn,bhn->bhp", new_state, Ch)
+    y = y + xh.astype(jnp.float32) * params["D"].astype(jnp.float32)[None, :, None]
+    y = y.reshape(-1, d_in)
+    yf = y * jax.nn.silu(z.astype(jnp.float32))
+    var = jnp.mean(yf * yf, axis=-1, keepdims=True)
+    yf = yf * jax.lax.rsqrt(var + 1e-6) * (1.0 + params["norm_z"].astype(jnp.float32))
+    out = jnp.einsum("bp,pd->bd", yf.astype(x.dtype), params["out_proj"])
+    new_cache = {"x": new_x, "B": new_B, "C": new_C,
+                 "state": new_state.astype(cache["state"].dtype)}
+    return out[:, None], new_cache

@@ -1,0 +1,114 @@
+"""Pool executor + ModiPick router: the live serving path.
+
+Per request: simulate the mobile uplink (the paper's measured WiFi/LTE
+distributions), compute the budget (Eq. 1), let the policy pick a variant,
+run real prefill+decode on the pool member, feed the measured wall time
+back into the EWMA profiles, and score the SLA.
+
+Straggler mitigation:
+- primary: ModiPick's σ-aware probabilistic routing (a straggling variant
+  sees its σ inflate and its selection probability collapse smoothly);
+- secondary: hedged re-issue — when a request exceeds μ + hedge_k·σ of its
+  variant's profile, it is re-issued on the fastest variant and the
+  effective latency is min(straggler, detect + fast) (standard
+  tail-at-scale hedging, emulated single-process).
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from repro.core.netmodel import NetworkModel
+from repro.core.policy import Policy, budget
+from repro.core.profiles import ModelProfile, ProfileStore
+from repro.serving.pool import Variant
+
+
+@dataclass
+class RequestResult:
+    variant: str
+    t_input_ms: float
+    t_infer_ms: float
+    t_e2e_ms: float
+    t_sla_ms: float
+    met_sla: bool
+    quality: float
+    hedged: bool = False
+
+
+@dataclass
+class PoolExecutor:
+    variants: List[Variant]
+    network: NetworkModel
+    policy: Policy
+    seed: int = 0
+    warmup_requests: int = 3
+    hedge_k: float = 6.0        # hedge when t > μ + k·σ
+    hedging: bool = False
+    alpha: float = 0.2
+
+    def __post_init__(self):
+        self.by_name: Dict[str, Variant] = {v.name: v for v in self.variants}
+        self.store = ProfileStore(
+            [ModelProfile(name=v.name, accuracy=v.quality) for v in self.variants],
+            alpha=self.alpha)
+        self.rng = np.random.default_rng(self.seed)
+        self.results: List[RequestResult] = []
+
+    def warm_up(self, tokens: np.ndarray, n_decode: int = 2):
+        """Paper §4: warm every model (compile + build profiles).  The
+        first run per variant is the JIT compile and is discarded."""
+        for v in self.variants:
+            v.run(tokens, n_decode)  # compile; not a latency sample
+            for _ in range(self.warmup_requests):
+                ms = v.run(tokens, n_decode)
+                self.store.observe(v.name, ms)
+
+    def execute(self, tokens: np.ndarray, t_sla: float,
+                n_decode: int = 2) -> RequestResult:
+        t_input = float(self.network.sample(self.rng, 1)[0])
+        t_budget = budget(t_sla, t_input)
+        name = self.policy.select(self.store, t_budget, self.rng)
+        self.store.mark_selected(name)
+        v = self.by_name[name]
+        t_infer = v.run(tokens, n_decode)
+        hedged = False
+        prof = self.store[name]
+        if self.hedging and prof.n_obs > 3 and \
+                t_infer > prof.mu + self.hedge_k * prof.sigma:
+            # re-issue on the fastest variant; overlap from detection point
+            fast = min(self.store.profiles.values(), key=lambda p: p.mu)
+            if fast.name != name:
+                detect = prof.mu + self.hedge_k * prof.sigma
+                t2 = self.by_name[fast.name].run(tokens, n_decode)
+                t_infer = min(t_infer, detect + t2)
+                hedged = True
+        self.store.observe(name, t_infer)
+        e2e = 2.0 * t_input + t_infer
+        res = RequestResult(
+            variant=name, t_input_ms=t_input, t_infer_ms=t_infer,
+            t_e2e_ms=e2e, t_sla_ms=t_sla, met_sla=e2e <= t_sla,
+            quality=v.quality, hedged=hedged)
+        self.results.append(res)
+        return res
+
+    # ------------------------------------------------------------------
+    def summary(self) -> Dict:
+        if not self.results:
+            return {}
+        rs = self.results
+        usage: Dict[str, int] = {}
+        for r in rs:
+            usage[r.variant] = usage.get(r.variant, 0) + 1
+        return {
+            "n": len(rs),
+            "sla_attainment": sum(r.met_sla for r in rs) / len(rs),
+            "mean_quality": float(np.mean([r.quality for r in rs])),
+            "mean_latency_ms": float(np.mean([r.t_e2e_ms for r in rs])),
+            "p99_latency_ms": float(np.percentile([r.t_e2e_ms for r in rs], 99)),
+            "hedged": sum(r.hedged for r in rs),
+            "usage": {k: v / len(rs) for k, v in sorted(usage.items())},
+        }

@@ -1,0 +1,79 @@
+"""Live model pool: JAX-served variants exposing accuracy/latency
+trade-offs (the LLM analogue of the paper's CNN zoo).
+
+Each variant owns compiled prefill/decode functions; ``scaled_family``
+builds a pool from one architecture at several widths/depths — e.g.
+qwen2-family at 0.25×/0.5×/1× — exactly the MobileNet-vs-Inception
+spectrum ModiPick exploits.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import api, model as M
+
+
+@dataclass
+class Variant:
+    name: str
+    cfg: ModelConfig
+    quality: float
+    params: object = None
+    prefill_fn: Callable = None
+    decode_fn: Callable = None
+    cache_len: int = 128
+
+    def build(self, key, dtype=jnp.float32):
+        self.params = M.init_params(self.cfg, key, dtype)
+        cache_len = self.cache_len
+
+        @jax.jit
+        def prefill_fn(params, tokens):
+            return M.prefill(self.cfg, params, {"tokens": tokens}, cache_len)
+
+        @jax.jit
+        def decode_fn(params, cache, tok, pos):
+            return M.decode_step(self.cfg, params, cache, tok, pos)
+
+        self.prefill_fn = prefill_fn
+        self.decode_fn = decode_fn
+        return self
+
+    def run(self, tokens: np.ndarray, n_decode: int = 4) -> float:
+        """Execute prefill + n_decode steps; returns wall ms (blocking)."""
+        t0 = time.perf_counter()
+        tok = jnp.asarray(tokens)
+        cache, logits = self.prefill_fn(self.params, tok)
+        B, S = tokens.shape
+        pos = jnp.full((B,), S, jnp.int32)
+        nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        for _ in range(n_decode):
+            logits_d, cache = self.decode_fn(self.params, cache, nxt, pos)
+            nxt = jnp.argmax(logits_d, axis=-1).astype(jnp.int32)
+            pos = pos + 1
+        jax.block_until_ready(logits_d)
+        return (time.perf_counter() - t0) * 1e3
+
+
+def scaled_family(base: ModelConfig, *, widths=(0.25, 0.5, 1.0),
+                  qualities=None, seed: int = 0,
+                  cache_len: int = 128) -> List[Variant]:
+    """Build a pool of width-scaled variants of one family."""
+    reduced = base.reduced()
+    out = []
+    key = jax.random.PRNGKey(seed)
+    for i, w in enumerate(widths):
+        cfg = reduced.scaled(w, name=f"{base.name}-w{w:g}")
+        q = qualities[i] if qualities else base.quality * (0.6 + 0.4 * w)
+        key, k = jax.random.split(key)
+        v = Variant(name=cfg.name, cfg=cfg, quality=q, cache_len=cache_len)
+        v.build(k)
+        out.append(v)
+    return out

@@ -1,0 +1,112 @@
+"""Mesh-agnostic checkpointing with atomic commits and keep-last-k.
+
+Checkpoints store *logical* (unsharded) arrays keyed by param path plus a
+JSON manifest (step, data-pipeline state, tree structure).  Restore
+re-shards onto whatever mesh the restarted job has — the elastic-restart
+path: save on 256 chips, resume on 512 (or on 1 CPU in tests).
+
+Commit protocol: write to ``<dir>/tmp.<step>`` then ``os.rename`` to
+``<dir>/step_<step>`` (atomic on POSIX), then prune.  A crash mid-write
+leaves only a tmp dir that is ignored and garbage-collected.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+
+def _flatten_with_paths(tree) -> List[Tuple[str, Any]]:
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    out = []
+    for path, leaf in flat:
+        key = "/".join(
+            str(p.key) if hasattr(p, "key") else str(p.idx) if hasattr(p, "idx") else str(p)
+            for p in path)
+        out.append((key, leaf))
+    return out
+
+
+def save(ckpt_dir: str, step: int, params, opt_state=None,
+         extra: Optional[dict] = None, keep_last: int = 3) -> str:
+    os.makedirs(ckpt_dir, exist_ok=True)
+    tmp = os.path.join(ckpt_dir, f"tmp.{step}")
+    final = os.path.join(ckpt_dir, f"step_{step:08d}")
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp)
+
+    manifest: Dict[str, Any] = {"step": step, "extra": extra or {}, "arrays": {}}
+    trees = {"params": params}
+    if opt_state is not None:
+        trees["opt"] = opt_state
+    for prefix, tree in trees.items():
+        for key, leaf in _flatten_with_paths(tree):
+            name = f"{prefix}/{key}"
+            arr = np.asarray(jax.device_get(leaf))
+            fn = name.replace("/", "__") + ".npy"
+            np.save(os.path.join(tmp, fn), arr)
+            manifest["arrays"][name] = {"file": fn, "dtype": str(arr.dtype),
+                                        "shape": list(arr.shape)}
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.rename(tmp, final)  # atomic commit
+
+    _prune(ckpt_dir, keep_last)
+    return final
+
+
+def _prune(ckpt_dir: str, keep_last: int) -> None:
+    steps = sorted(d for d in os.listdir(ckpt_dir) if d.startswith("step_"))
+    for d in steps[:-keep_last] if keep_last > 0 else []:
+        shutil.rmtree(os.path.join(ckpt_dir, d))
+    for d in os.listdir(ckpt_dir):  # GC crashed partial writes
+        if d.startswith("tmp."):
+            shutil.rmtree(os.path.join(ckpt_dir, d))
+
+
+def latest_step(ckpt_dir: str) -> Optional[int]:
+    if not os.path.isdir(ckpt_dir):
+        return None
+    steps = sorted(d for d in os.listdir(ckpt_dir) if d.startswith("step_"))
+    return int(steps[-1].split("_")[1]) if steps else None
+
+
+def restore(ckpt_dir: str, step: int, params_like, opt_like=None,
+            shardings=None) -> Tuple[Any, Any, dict]:
+    """Restore onto templates (`*_like` trees of arrays or
+    ShapeDtypeStructs).  ``shardings``: optional matching tree of
+    NamedShardings for direct sharded device_put (elastic re-shard)."""
+    path = os.path.join(ckpt_dir, f"step_{step:08d}")
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+
+    def load_tree(prefix, like, shard_tree):
+        keys_and_leaves = _flatten_with_paths(like)
+        treedef = jax.tree.structure(like)
+        shard_leaves = (jax.tree.leaves(shard_tree)
+                        if shard_tree is not None else [None] * len(keys_and_leaves))
+        leaves = []
+        for (key, leaf), shd in zip(keys_and_leaves, shard_leaves):
+            meta = manifest["arrays"][f"{prefix}/{key}"]
+            arr = np.load(os.path.join(path, meta["file"]))
+            expect = tuple(leaf.shape)
+            assert tuple(arr.shape) == expect, (key, arr.shape, expect)
+            if shd is not None:
+                leaves.append(jax.device_put(arr, shd))
+            else:
+                leaves.append(jax.numpy.asarray(arr, dtype=leaf.dtype))
+        return jax.tree.unflatten(treedef, leaves)
+
+    p_shard = o_shard = None
+    if shardings is not None:
+        p_shard, o_shard = shardings
+    params = load_tree("params", params_like, p_shard)
+    opt = load_tree("opt", opt_like, o_shard) if opt_like is not None else None
+    return params, opt, manifest["extra"]

@@ -1,0 +1,67 @@
+"""Fault-tolerant training loop: periodic checkpoints, crash recovery,
+failure injection for tests, elastic restart."""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, TrainConfig
+from repro.data.pipeline import TokenStream
+from repro.training import checkpoint as ckpt
+from repro.training.train_step import init_train_state, make_train_step
+
+
+@dataclass
+class TrainLoop:
+    mcfg: ModelConfig
+    tcfg: TrainConfig
+    ckpt_dir: Optional[str] = None
+    ckpt_every: int = 50
+    keep_last: int = 3
+    dtype: object = jnp.float32
+    # failure injection: raise at this step (tests crash/recovery)
+    fail_at_step: Optional[int] = None
+    log_every: int = 10
+    history: List[Dict] = field(default_factory=list)
+
+    def run(self, stream: TokenStream, n_steps: int,
+            on_step: Optional[Callable[[int, Dict], None]] = None) -> Dict:
+        step_fn = jax.jit(make_train_step(self.mcfg, self.tcfg), donate_argnums=(0, 1))
+        key = jax.random.PRNGKey(self.tcfg.seed)
+        params, opt_state = init_train_state(self.mcfg, key, self.dtype)
+
+        start = 0
+        if self.ckpt_dir:
+            last = ckpt.latest_step(self.ckpt_dir)
+            if last is not None:
+                params, opt_state, extra = ckpt.restore(
+                    self.ckpt_dir, last, params, opt_state)
+                stream.restore(extra["data"])
+                start = last
+
+        metrics = {}
+        for step in range(start, n_steps):
+            if self.fail_at_step is not None and step == self.fail_at_step:
+                raise RuntimeError(f"injected failure at step {step}")
+            batch = {k: jnp.asarray(v) for k, v in next(stream).items()}
+            t0 = time.perf_counter()
+            params, opt_state, metrics = step_fn(params, opt_state, batch)
+            metrics = {k: float(v) for k, v in metrics.items()}
+            metrics["step_time_s"] = time.perf_counter() - t0
+            if on_step:
+                on_step(step, metrics)
+            if step % self.log_every == 0:
+                self.history.append({"step": step, **metrics})
+            if self.ckpt_dir and (step + 1) % self.ckpt_every == 0:
+                ckpt.save(self.ckpt_dir, step + 1, params, opt_state,
+                          extra={"data": stream.state()},
+                          keep_last=self.keep_last)
+        if self.ckpt_dir:
+            ckpt.save(self.ckpt_dir, n_steps, params, opt_state,
+                      extra={"data": stream.state()}, keep_last=self.keep_last)
+        self._final_params = params
+        return metrics

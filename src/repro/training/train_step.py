@@ -1,0 +1,64 @@
+"""Train step: loss + grads + AdamW, with optional microbatch gradient
+accumulation (fp32 accumulator, `lax.scan` over microbatches so HLO stays
+small)."""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, TrainConfig
+from repro.models.api import make_forward_loss
+from repro.training.optimizer import OptState, adamw_update, init_opt_state
+
+
+def make_train_step(mcfg: ModelConfig, tcfg: TrainConfig):
+    loss_fn = make_forward_loss(mcfg, remat=tcfg.remat != "none")
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def single(params, opt_state: OptState, batch):
+        (loss, metrics), grads = grad_fn(params, batch)
+        params, opt_state, om = adamw_update(tcfg, params, grads, opt_state)
+        return params, opt_state, {**metrics, **om, "total_loss": loss}
+
+    if tcfg.grad_accum <= 1:
+        return single
+
+    k = tcfg.grad_accum
+
+    def accumulated(params, opt_state: OptState, batch):
+        def reshape(x):
+            return x.reshape((k, x.shape[0] // k) + x.shape[1:])
+
+        micro = jax.tree.map(reshape, batch)
+        acc0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+        def body(carry, mb):
+            acc, loss_sum = carry
+            (loss, _), grads = grad_fn(params, mb)
+            acc = jax.tree.map(lambda a, g: a + g.astype(jnp.float32) / k,
+                               acc, grads)
+            return (acc, loss_sum + loss / k), 0
+
+        from repro.models import runtime_flags
+        if runtime_flags.UNROLL_SCANS:
+            carry = (acc0, jnp.zeros((), jnp.float32))
+            for i in range(k):
+                carry, _ = body(carry, jax.tree.map(lambda a: a[i], micro))
+            grads, loss = carry
+        else:
+            (grads, loss), _ = jax.lax.scan(
+                body, (acc0, jnp.zeros((), jnp.float32)), micro)
+        params, opt_state, om = adamw_update(tcfg, params, grads, opt_state)
+        return params, opt_state, {**om, "total_loss": loss, "loss": loss}
+
+    return accumulated
+
+
+def init_train_state(mcfg: ModelConfig, key, dtype=jnp.bfloat16,
+                     tcfg: TrainConfig = None):
+    from repro.models import model as M
+    params = M.init_params(mcfg, key, dtype)
+    moments = tcfg.opt_moments if tcfg else "fp32"
+    return params, init_opt_state(params, moments)

@@ -1,0 +1,29 @@
+"""Dry-run machinery smoke test: lower+compile one cheap cell on a tiny
+fake-device mesh in a subprocess (so pytest's jax stays at 1 device)."""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+@pytest.mark.parametrize("arch,shape", [
+    ("mamba2-1.3b", "long_500k"),      # ssm decode + context parallel
+    ("whisper-tiny", "decode_32k"),    # enc-dec cross-attention cache
+])
+def test_dryrun_cell_compiles_on_debug_mesh(arch, shape, tmp_path):
+    env = dict(os.environ, REPRO_DRYRUN_DEVICES="8",
+               PYTHONPATH=os.path.join(ROOT, "src"))
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun", "--arch", arch,
+         "--shape", shape, "--mesh", "2x4", "--out", str(tmp_path)],
+        env=env, capture_output=True, text=True, timeout=480, cwd=ROOT)
+    assert proc.returncode == 0, proc.stdout[-2000:] + proc.stderr[-2000:]
+    out = json.load(open(tmp_path / f"{arch}__{shape}__2x4.json"))
+    assert out["status"] == "ok"
+    assert out["roofline"]["hlo_flops"] > 0
+    assert out["cost"]["bytes_accessed"] > 0
+    assert out["roofline"]["dominant"] in ("compute", "memory", "collective")

@@ -1,0 +1,106 @@
+"""Per-kernel allclose vs the pure-jnp oracles: shape/dtype sweeps in
+interpret mode (the kernel bodies execute on CPU through the JAX
+interpreter)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+
+def tol(dtype):
+    return dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 else \
+        dict(rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("B,H,KV,S,hd,window", [
+    (1, 4, 4, 128, 64, 0),      # MHA causal
+    (2, 4, 2, 256, 64, 0),      # GQA causal
+    (2, 4, 1, 256, 32, 64),     # MQA sliding window
+    (1, 8, 4, 512, 128, 128),   # GQA window, MXU-aligned head dim
+])
+def test_flash_attention(dtype, B, H, KV, S, hd, window):
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(ks[0], (B, H, S, hd), jnp.float32).astype(dtype)
+    k = jax.random.normal(ks[1], (B, KV, S, hd), jnp.float32).astype(dtype)
+    v = jax.random.normal(ks[2], (B, KV, S, hd), jnp.float32).astype(dtype)
+    out = ops.flash_attention(q, k, v, causal=True, window=window,
+                              block_q=64, block_k=64)
+    expect = ref.flash_attention_ref(q, k, v, causal=True, window=window)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(expect, np.float32), **tol(dtype))
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("B,KV,G,S,hd,window", [
+    (2, 2, 2, 256, 64, 0),
+    (1, 4, 1, 128, 128, 0),
+    (3, 2, 4, 256, 32, 96),
+])
+def test_decode_attention(dtype, B, KV, G, S, hd, window):
+    ks = jax.random.split(jax.random.PRNGKey(1), 3)
+    q = jax.random.normal(ks[0], (B, KV, G, hd), jnp.float32).astype(dtype)
+    k = jax.random.normal(ks[1], (B, KV, S, hd), jnp.float32).astype(dtype)
+    v = jax.random.normal(ks[2], (B, KV, S, hd), jnp.float32).astype(dtype)
+    pos = jnp.asarray(np.random.default_rng(0).integers(1, S, B), jnp.int32)
+    out = ops.decode_attention(q, k, v, pos, window=window, block_k=64)
+    expect = ref.decode_attention_ref(q, k, v, pos, window=window)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(expect, np.float32), **tol(dtype))
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("B,H,G,S,hd,N,chunk", [
+    (1, 2, 1, 128, 16, 16, 32),
+    (2, 4, 2, 256, 32, 64, 64),
+    (1, 4, 4, 128, 64, 128, 128),
+])
+def test_ssd_scan(dtype, B, H, G, S, hd, N, chunk):
+    ks = jax.random.split(jax.random.PRNGKey(2), 5)
+    x = (jax.random.normal(ks[0], (B, H, S, hd), jnp.float32) * 0.5).astype(dtype)
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, H, S), jnp.float32))
+    A = -jnp.exp(jax.random.normal(ks[2], (H,), jnp.float32) * 0.3)
+    B_ = (jax.random.normal(ks[3], (B, G, S, N), jnp.float32) * 0.3).astype(dtype)
+    C_ = (jax.random.normal(ks[4], (B, G, S, N), jnp.float32) * 0.3).astype(dtype)
+    out = ops.ssd_scan(x, dt.astype(dtype), A, B_, C_, chunk=chunk)
+    expect = ref.ssd_scan_ref(x, dt.astype(dtype), A, B_, C_)
+    scale = np.maximum(np.abs(np.asarray(expect, np.float32)).max(), 1.0)
+    np.testing.assert_allclose(np.asarray(out, np.float32) / scale,
+                               np.asarray(expect, np.float32) / scale,
+                               **tol(dtype))
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("B,S,W,block", [
+    (1, 128, 64, 32),
+    (2, 256, 128, 64),
+    (2, 512, 256, 256),
+])
+def test_rglru_scan(dtype, B, S, W, block):
+    ks = jax.random.split(jax.random.PRNGKey(3), 2)
+    a = (jax.nn.sigmoid(jax.random.normal(ks[0], (B, S, W), jnp.float32)) * 0.98).astype(dtype)
+    b = (jax.random.normal(ks[1], (B, S, W), jnp.float32) * 0.1).astype(dtype)
+    out = ops.rglru_scan(a, b, block_s=block)
+    expect = ref.rglru_scan_ref(a, b)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(expect, np.float32), **tol(dtype))
+
+
+def test_flash_vs_model_xla_path():
+    """The model's chunked XLA attention and the Pallas kernel agree."""
+    from repro.models.attention import attention_full
+    ks = jax.random.split(jax.random.PRNGKey(4), 3)
+    B, H, KV, S, hd = 2, 4, 2, 256, 64
+    q = jax.random.normal(ks[0], (B, S, H, hd), jnp.float32)
+    k = jax.random.normal(ks[1], (B, S, KV, hd), jnp.float32)
+    v = jax.random.normal(ks[2], (B, S, KV, hd), jnp.float32)
+    pos = jnp.broadcast_to(jnp.arange(S), (B, S))
+    xla_out = attention_full(q, k, v, pos, pos, causal=True, q_chunk=64)
+    pl_out = ops.flash_attention(
+        q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+        v.transpose(0, 2, 1, 3), causal=True, block_q=64, block_k=64)
+    np.testing.assert_allclose(np.asarray(xla_out, np.float32),
+                               np.asarray(pl_out.transpose(0, 2, 1, 3), np.float32),
+                               rtol=2e-5, atol=2e-5)

@@ -1,0 +1,154 @@
+"""End-to-end behaviour tests: the paper's claims, reproduced.
+
+These run the closed-loop simulator seeded with the paper's empirical
+measurements (Table 2 zoo + campus-WiFi network) and assert the headline
+results of §4; plus a live serving e2e with real JAX model executions.
+"""
+import numpy as np
+import pytest
+
+from repro.core.netmodel import NetworkModel, campus_wifi
+from repro.core.policy import (DynamicGreedy, ModiPick, PureRandom,
+                               RelatedAccurate, RelatedRandom, StaticGreedy)
+from repro.core.simulate import Simulator
+from repro.core.zoo import NASNET_FICTIONAL, TABLE2
+
+N_REQ = 2000  # enough for stable estimates, fast in CI
+
+
+@pytest.fixture(scope="module")
+def sim():
+    return Simulator(entries=TABLE2, network=campus_wifi(), seed=1)
+
+
+def test_modipick_beats_static_greedy_attainment(sim):
+    """§4.2: ModiPick vastly improves SLA attainment at mid SLAs while
+    static greedy keeps violating until ~250ms."""
+    for sla in (115.0, 150.0, 200.0):
+        mp = sim.run(ModiPick(t_threshold=20.0), sla, N_REQ)
+        sg = sim.run(StaticGreedy(sla), sla, N_REQ)
+        assert mp.sla_attainment > sg.sla_attainment + 0.2, (
+            sla, mp.sla_attainment, sg.sla_attainment)
+
+
+def test_modipick_latency_reduction_up_to_42pct(sim):
+    """§4.2: 'up to 42% lower end-to-end latency'."""
+    mp = sim.run(ModiPick(t_threshold=20.0), 115.0, N_REQ)
+    sg = sim.run(StaticGreedy(115.0), 115.0, N_REQ)
+    reduction = 1.0 - mp.mean_latency / sg.mean_latency
+    assert reduction > 0.30, reduction
+
+
+def test_modipick_accuracy_converges_at_high_sla(sim):
+    """§4.1/4.2: accuracy climbs with SLA and approaches the best model."""
+    accs = [sim.run(ModiPick(t_threshold=20.0), s, N_REQ).mean_accuracy
+            for s in (115.0, 200.0, 300.0)]
+    assert accs[0] < accs[1] < accs[2]
+    assert accs[2] > 0.80  # near NasNet-Large's 82.6%
+
+
+def test_model_usage_diversifies_with_sla(sim):
+    """§4.2 Fig 6b: more accurate models enter the mix as SLA grows."""
+    low = sim.run(ModiPick(t_threshold=20.0), 110.0, N_REQ).model_usage
+    high = sim.run(ModiPick(t_threshold=20.0), 300.0, N_REQ).model_usage
+    assert high.get("NasNet-Large", 0.0) > low.get("NasNet-Large", 0.0)
+    assert low.get("MobileNetV1-0.25", 0.0) > high.get("MobileNetV1-0.25", 0.0)
+
+
+def test_cv_robustness():
+    """§4.3: at a reasonable SLA, attainment stays high across network CV."""
+    for cv in (0.0, 0.5, 1.0):
+        s = Simulator(entries=TABLE2,
+                      network=NetworkModel.from_cv(50.0, cv), seed=2)
+        r = s.run(ModiPick(t_threshold=20.0), 250.0, N_REQ)
+        assert r.sla_attainment > 0.75, (cv, r.sla_attainment)
+        assert r.mean_accuracy > 0.70
+
+
+def test_fictional_model_avoided_but_explored():
+    """§4.4 Fig 9 (γ=4 variant, see EXPERIMENTS.md §Fig9 reproduction
+    note): ModiPick nearly matches related-accurate accuracy by giving
+    NasNet-Fictional low (but non-zero) probability; related-random cannot
+    tell the two apart and degrades."""
+    entries = TABLE2 + [NASNET_FICTIONAL]
+    s = Simulator(entries=entries,
+                  network=NetworkModel(mean_ms=50.0, std_ms=25.0), seed=3)
+    mp = s.run(ModiPick(t_threshold=20.0, gamma=4.0), 250.0, N_REQ)
+    rr = s.run(RelatedRandom(t_threshold=20.0), 250.0, N_REQ)
+    ra = s.run(RelatedAccurate(t_threshold=20.0), 250.0, N_REQ)
+    pr = s.run(PureRandom(), 250.0, N_REQ)
+    assert mp.mean_accuracy > rr.mean_accuracy + 0.02
+    assert abs(mp.mean_accuracy - ra.mean_accuracy) < 0.05
+    assert mp.mean_accuracy > pr.mean_accuracy
+    fict = mp.model_usage.get("NasNet-Fictional", 0.0)
+    assert 0.0 < fict < 0.25  # avoided, yet still explored
+
+
+def test_fictional_eq3_literal_reproduction_gap():
+    """Documented gap: Eq. 3 as printed splits probability ∝ accuracy, so
+    the fictional model (A=0.50 vs NasNet-Large 0.826) is picked ≈3/8 of
+    the time when only those two are eligible — NOT the paper's 'low
+    probability'.  This test pins the literal behaviour."""
+    entries = TABLE2 + [NASNET_FICTIONAL]
+    s = Simulator(entries=entries,
+                  network=NetworkModel(mean_ms=50.0, std_ms=25.0), seed=3)
+    mp = s.run(ModiPick(t_threshold=20.0, gamma=1.0), 250.0, N_REQ)
+    fict = mp.model_usage.get("NasNet-Fictional", 0.0)
+    assert 0.2 < fict < 0.5
+
+
+def test_pure_random_flat_latency():
+    """§4.4: pure random ignores the SLA entirely."""
+    s = Simulator(entries=TABLE2,
+                  network=NetworkModel(mean_ms=50.0, std_ms=25.0), seed=4)
+    lats = [s.run(PureRandom(), sla, 1000).mean_latency
+            for sla in (100.0, 200.0, 300.0)]
+    assert max(lats) - min(lats) < 10.0
+
+
+def test_exploration_recovers_from_latency_spike():
+    """The explore/exploit motivation (§3.3.2): despite transient spikes
+    polluting profiles, accurate slow models keep serving most requests."""
+    s = Simulator(entries=TABLE2, network=NetworkModel(50.0, 10.0),
+                  seed=5, spike_prob=0.01, spike_mult=8.0)
+    r = s.run(ModiPick(t_threshold=25.0), 280.0, 4000)
+    # σ-aware routing goes defensive under spikes but keeps serving
+    # accurate mid-tier models and holds the SLA.
+    heavy = sum(v for k, v in r.model_usage.items()
+                if k in ("NasNet-Large", "InceptionV4", "InceptionV3",
+                         "InceptionResNetV2"))
+    assert heavy > 0.35
+    assert r.mean_accuracy > 0.70
+    assert r.sla_attainment > 0.9
+
+
+def test_dynamic_greedy_between_static_and_modipick(sim):
+    """§3.2: dynamic greedy fixes the network-blindness of static greedy;
+    ModiPick matches its attainment while keeping exploration."""
+    sla = 150.0
+    dg = sim.run(DynamicGreedy(), sla, N_REQ)
+    sg = sim.run(StaticGreedy(sla), sla, N_REQ)
+    mp = sim.run(ModiPick(t_threshold=20.0), sla, N_REQ)
+    assert dg.sla_attainment > sg.sla_attainment
+    assert abs(mp.sla_attainment - dg.sla_attainment) < 0.05
+
+
+# ----------------------------------------------------------------------
+def test_live_serving_e2e():
+    """Real JAX pool (width-scaled qwen2 family) behind ModiPick: the
+    router must meet SLAs with real measured model latencies."""
+    from repro.configs.registry import get_config
+    from repro.serving.executor import PoolExecutor
+    from repro.serving.pool import scaled_family
+
+    variants = scaled_family(get_config("qwen2-1.5b"), widths=(0.5, 1.0),
+                             cache_len=96)
+    tokens = np.random.default_rng(0).integers(0, 500, (2, 64), dtype=np.int32)
+    net = NetworkModel(mean_ms=15.0, std_ms=8.0)
+    ex = PoolExecutor(variants, net, ModiPick(t_threshold=25.0), seed=3)
+    ex.warm_up(tokens)
+    for _ in range(30):
+        ex.execute(tokens, t_sla=150.0)
+    s = ex.summary()
+    assert s["sla_attainment"] > 0.6
+    assert len(s["usage"]) >= 1
