@@ -1,6 +1,7 @@
 # One function per paper table/figure. Prints ``name,us_per_call,derived`` CSV.
 import argparse
 import sys
+import traceback
 
 
 def main() -> None:
@@ -9,8 +10,11 @@ def main() -> None:
                     help="comma-separated benchmark names (default: all)")
     ap.add_argument("--fast", action="store_true",
                     help="skip the live-pool serving benchmark")
+    ap.add_argument("--fail-fast", action="store_true",
+                    help="abort on the first failing benchmark")
     args = ap.parse_args()
 
+    from benchmarks import load_sweep as ls
     from benchmarks import paper_figures as pf
     from benchmarks import roofline as rl
 
@@ -27,20 +31,28 @@ def main() -> None:
         "roofline_multi": lambda: rl.roofline_rows("multi"),
         "kernels": rl.kernel_micro,
         "tpu_pool": _tpu_pool,
+        "load_sweep": ls.sweep_rows,
     }
     if not args.fast:
         benches["live_pool"] = _live_pool
 
     selected = args.only.split(",") if args.only else list(benches)
+    unknown = [n for n in selected if n not in benches]
+    if unknown:
+        raise SystemExit(f"unknown benchmark(s): {', '.join(unknown)} "
+                         f"(available: {', '.join(benches)})")
     print("name,us_per_call,derived")
     failures = 0
     for name in selected:
         try:
             for row in benches[name]():
                 print(f"{row[0]},{row[1]:.3f},{row[2]}")
-        except Exception as e:  # pragma: no cover
+        except Exception as e:
             failures += 1
+            traceback.print_exc(file=sys.stderr)
             print(f"{name},0.0,ERROR:{type(e).__name__}:{e}", file=sys.stderr)
+            if args.fail_fast:
+                break
     if failures:
         raise SystemExit(1)
 

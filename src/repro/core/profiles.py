@@ -21,6 +21,8 @@ class ModelProfile:
     var: float = 0.0           # EWMA variance (ms²)
     n_obs: int = 0
     last_selected: int = 0     # request counter at last selection
+    queue_mu: float = 0.0      # EWMA queue wait (ms) at this model's replica
+    queue_obs: int = 0
 
     @property
     def sigma(self) -> float:
@@ -36,6 +38,15 @@ class ModelProfile:
             # EW variance (West 1979 incremental form)
             self.var = (1.0 - alpha) * (self.var + alpha * delta * delta)
         self.n_obs += 1
+
+    def update_queue(self, wait_ms: float, alpha: float) -> None:
+        """EWMA of the queue wait observed in front of this model's
+        replica — the telemetry behind queue-aware budgets."""
+        if self.queue_obs == 0:
+            self.queue_mu = wait_ms
+        else:
+            self.queue_mu += alpha * (wait_ms - self.queue_mu)
+        self.queue_obs += 1
 
 
 class ProfileStore:
@@ -57,6 +68,14 @@ class ProfileStore:
     def observe(self, name: str, latency_ms: float) -> None:
         self.profiles[name].update(latency_ms, self.alpha)
 
+    def observe_queue(self, name: str, wait_ms: float) -> None:
+        self.profiles[name].update_queue(wait_ms, self.alpha)
+
+    def queue_wait(self, name: str) -> float:
+        """Estimated queue wait W_queue(m) from telemetry (0 until the
+        first observation)."""
+        return self.profiles[name].queue_mu
+
     def mark_selected(self, name: str) -> None:
         self.step += 1
         self.profiles[name].last_selected = self.step
@@ -75,6 +94,6 @@ class ProfileStore:
     def snapshot(self) -> Dict[str, dict]:
         return {
             n: {"mu": p.mu, "sigma": p.sigma, "accuracy": p.accuracy,
-                "n_obs": p.n_obs}
+                "n_obs": p.n_obs, "queue_mu": p.queue_mu}
             for n, p in self.profiles.items()
         }

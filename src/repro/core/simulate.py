@@ -1,22 +1,22 @@
 """Closed-loop ModiPick simulator (reproduces the paper's §4 experiments).
 
-Per request: sample the uplink transfer time, compute the budget (Eq. 1),
-let the policy pick a model, sample that model's *true* inference latency,
-feed the observation back into the EWMA profile store, and score SLA
-attainment + accuracy.  Matches the paper's setup of 10k requests per
-(SLA, network) point seeded from the empirical measurements in zoo.py.
+This is now a thin wrapper over the discrete-event engine in
+``repro.sim``: the paper's loop is exactly ``ClosedLoopArrivals`` over a
+single shared replica, and the engine replays it draw-for-draw — same
+RNG, same order (uplink sample → selection → true latency → EWMA
+feedback → cold-model probe), so seeded results are unchanged by the
+refactor.  Open-loop traffic, FIFO queues, heterogeneous replicas and
+queue-aware selection live in ``repro.sim.engine.ServingSimulator``.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Dict, List, Optional, Sequence
 
-import numpy as np
-
 from repro.core.netmodel import NetworkModel
-from repro.core.policy import Policy, budget
+from repro.core.policy import Policy
 from repro.core.profiles import ProfileStore
-from repro.core.zoo import ZooEntry, make_store, true_profiles
+from repro.core.zoo import ZooEntry
 
 
 @dataclass
@@ -48,59 +48,31 @@ class Simulator:
     spike_prob: float = 0.0
     spike_mult: float = 10.0
 
-    def _true_latency(self, rng, entry: ZooEntry) -> float:
-        t = max(0.05, rng.normal(entry.mu_ms, entry.sigma_ms))
-        if self.spike_prob > 0 and rng.random() < self.spike_prob:
-            t *= self.spike_mult
-        return t
+    def _engine(self):
+        from repro.sim.engine import ServingSimulator
+        from repro.sim.replica import shared_replicas
+        return ServingSimulator(
+            entries=list(self.entries), network=self.network,
+            replicas=shared_replicas(1), seed=self.seed, alpha=self.alpha,
+            cold_age=self.cold_age, cold_probe=self.cold_probe,
+            spike_prob=self.spike_prob, spike_mult=self.spike_mult)
 
     def run(self, policy: Policy, t_sla: float, n_requests: int = 10_000,
-            warm: bool = True, store: Optional[ProfileStore] = None) -> SimResult:
-        rng = np.random.default_rng(self.seed)
-        store = store or make_store(list(self.entries), alpha=self.alpha,
-                                    cold_age=self.cold_age, warm=warm)
-        truth = true_profiles(list(self.entries))
-
-        met = 0
-        acc_sum = 0.0
-        lat: List[float] = []
-        usage: Dict[str, int] = {}
-
-        for _ in range(n_requests):
-            t_input = float(self.network.sample(rng, 1)[0])
-            t_budget = budget(t_sla, t_input)
-            name = policy.select(store, t_budget, rng)
-            store.mark_selected(name)
-            t_inf = self._true_latency(rng, truth[name])
-            store.observe(name, t_inf)
-            # End-to-end: uplink + inference + downlink (≈ uplink is the
-            # conservative 2·T_input estimate; actual downlink is smaller —
-            # we charge half the uplink like a small response).
-            e2e = 2.0 * t_input + t_inf
-            met += e2e <= t_sla
-            acc_sum += truth[name].top1 / 100.0
-            lat.append(e2e)
-            usage[name] = usage.get(name, 0) + 1
-
-            # Cold-model refresh (§3.3 practical considerations): probe one
-            # stale model out-of-band (does not affect request latency).
-            if self.cold_probe:
-                cold = store.cold_models()
-                if cold:
-                    probe = cold[int(rng.integers(len(cold)))]
-                    store.observe(probe, self._true_latency(rng, truth[probe]))
-                    store.profiles[probe].last_selected = store.step
-
-        lat_arr = np.array(lat)
+            warm: bool = True, store: Optional[ProfileStore] = None
+            ) -> SimResult:
+        from repro.sim.arrivals import ClosedLoopArrivals
+        res = self._engine().run(policy, t_sla, n_requests,
+                                 arrivals=ClosedLoopArrivals(),
+                                 warm=warm, store=store)
         return SimResult(
-            policy=policy.name,
-            t_sla=t_sla,
-            n=n_requests,
-            sla_attainment=met / n_requests,
-            mean_accuracy=acc_sum / n_requests,
-            mean_latency=float(lat_arr.mean()),
-            p99_latency=float(np.percentile(lat_arr, 99)),
-            model_usage={k: v / n_requests for k, v in sorted(usage.items())},
+            policy=res.policy,
+            t_sla=res.t_sla,
+            n=res.n_completed,
+            sla_attainment=res.sla_attainment,
+            mean_accuracy=res.mean_accuracy,
+            mean_latency=res.mean_latency,
+            p99_latency=res.p99_latency,
+            model_usage=res.model_usage,
         )
 
 

@@ -63,6 +63,10 @@ def logical_to_spec(
         if assignment is None:
             out.append(None)
             continue
+        # Preserve the rule's spelling: tuple rules stay tuples even when
+        # singleton — current jax PartitionSpec equality distinguishes
+        # P('x') from P(('x',)) although they shard identically.
+        as_tuple = not isinstance(assignment, str)
         axes = (assignment,) if isinstance(assignment, str) else tuple(assignment)
         axes = tuple(a for a in axes if a not in used)
         if mesh is not None and shape is not None:
@@ -78,7 +82,7 @@ def logical_to_spec(
             out.append(None)
             continue
         used.update(axes)
-        out.append(axes[0] if len(axes) == 1 else axes)
+        out.append(axes if as_tuple else axes[0])
     return P(*out)
 
 

@@ -34,17 +34,22 @@ class GenRequest:
     done: bool = False
     first_token_s: Optional[float] = None
     finish_s: Optional[float] = None
+    queue_wait_s: Optional[float] = None  # submit → slot insert
 
 
 class ContinuousBatcher:
     def __init__(self, cfg: ModelConfig, params, *, max_slots: int = 4,
                  cache_len: int = 256, eos_id: Optional[int] = None,
-                 dtype=jnp.float32):
+                 dtype=jnp.float32, store=None, model_name: str = ""):
+        # ``store``: optional repro.core.profiles.ProfileStore — queue
+        # waits observed here feed W_queue(m) for queue-aware selection.
         self.cfg = cfg
         self.params = params
         self.max_slots = max_slots
         self.cache_len = cache_len
         self.eos_id = eos_id
+        self.store = store
+        self.model_name = model_name or cfg.name
         self.cache = M.init_cache(cfg, max_slots, cache_len, dtype)
         # batch-dim index per cache leaf (stacked leaves lead with 'layers')
         self._batch_dims = jax.tree.leaves(jax.tree.map(
@@ -64,9 +69,15 @@ class ContinuousBatcher:
 
     # ------------------------------------------------------------------
     def submit(self, req: GenRequest) -> None:
+        # queue wait is measured from here, not from request construction
+        req.arrival_s = time.perf_counter()
         self.waiting.append(req)
 
     def _insert_slot(self, slot: int, req: GenRequest) -> None:
+        req.queue_wait_s = time.perf_counter() - req.arrival_s
+        if self.store is not None:
+            self.store.observe_queue(self.model_name,
+                                     req.queue_wait_s * 1e3)
         tokens = jnp.asarray(req.prompt[None, :])
         cache1, logits = self._prefill(self.params, {"tokens": tokens})
 
@@ -102,6 +113,24 @@ class ContinuousBatcher:
                 req.done = True
                 req.finish_s = time.perf_counter()
                 self.slots[slot] = None
+
+    # ------------------------------------------------------------------
+    def queue_depth(self) -> int:
+        """Waiting + in-flight requests (the replica's FIFO depth)."""
+        return len(self.waiting) + sum(r is not None for r in self.slots)
+
+    def telemetry(self) -> Dict:
+        """Queue-depth / queue-wait snapshot for the profile store."""
+        waits = [r.queue_wait_s for r in self.slots
+                 if r is not None and r.queue_wait_s is not None]
+        return {
+            "model": self.model_name,
+            "queue_depth": self.queue_depth(),
+            "waiting": len(self.waiting),
+            "active": sum(r is not None for r in self.slots),
+            "mean_queue_wait_ms":
+                float(np.mean(waits)) * 1e3 if waits else 0.0,
+        }
 
     # ------------------------------------------------------------------
     def step(self) -> bool:

@@ -17,7 +17,7 @@ from __future__ import annotations
 
 import time
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional
+from typing import Callable, Dict, List, Optional
 
 import numpy as np
 
@@ -37,6 +37,7 @@ class RequestResult:
     met_sla: bool
     quality: float
     hedged: bool = False
+    w_queue_ms: float = 0.0     # queue-wait estimate charged at selection
 
 
 @dataclass
@@ -49,6 +50,11 @@ class PoolExecutor:
     hedge_k: float = 6.0        # hedge when t > μ + k·σ
     hedging: bool = False
     alpha: float = 0.2
+    # queue-aware routing: budget becomes T_sla − 2·T_input − W_queue(m),
+    # with W_queue from per-variant in-flight work + batcher telemetry
+    # (or an injected estimator, e.g. a load-emulation model).
+    queue_aware: bool = False
+    w_queue_fn: Optional[Callable[[str], float]] = None
 
     def __post_init__(self):
         self.by_name: Dict[str, Variant] = {v.name: v for v in self.variants}
@@ -57,6 +63,22 @@ class PoolExecutor:
             alpha=self.alpha)
         self.rng = np.random.default_rng(self.seed)
         self.results: List[RequestResult] = []
+        self._qa = None
+        if self.queue_aware:
+            # lazy: the live path only depends on repro.sim when the
+            # queue-aware feature is actually enabled
+            from repro.sim.queueaware import QueueAwareSelector
+            self._qa = QueueAwareSelector(self.policy)
+
+    def w_queue(self, name: str) -> float:
+        """W_queue(m) estimate for variant ``name``."""
+        if self.w_queue_fn is not None:
+            return float(self.w_queue_fn(name))
+        v = self.by_name[name]
+        prof = self.store[name]
+        if hasattr(v, "estimated_wait_ms"):
+            return v.estimated_wait_ms(prof)
+        return prof.queue_mu
 
     def warm_up(self, tokens: np.ndarray, n_decode: int = 2):
         """Paper §4: warm every model (compile + build profiles).  The
@@ -71,10 +93,20 @@ class PoolExecutor:
                 n_decode: int = 2) -> RequestResult:
         t_input = float(self.network.sample(self.rng, 1)[0])
         t_budget = budget(t_sla, t_input)
-        name = self.policy.select(self.store, t_budget, self.rng)
+        w_queue = 0.0
+        if self.queue_aware:
+            name = self._qa.select(self.store, t_budget, self.w_queue,
+                                   self.rng)
+            w_queue = self.w_queue(name)
+        else:
+            name = self.policy.select(self.store, t_budget, self.rng)
         self.store.mark_selected(name)
         v = self.by_name[name]
-        t_infer = v.run(tokens, n_decode)
+        v.inflight = getattr(v, "inflight", 0) + 1
+        try:
+            t_infer = v.run(tokens, n_decode)
+        finally:
+            v.inflight -= 1
         hedged = False
         prof = self.store[name]
         if self.hedging and prof.n_obs > 3 and \
@@ -91,7 +123,7 @@ class PoolExecutor:
         res = RequestResult(
             variant=name, t_input_ms=t_input, t_infer_ms=t_infer,
             t_e2e_ms=e2e, t_sla_ms=t_sla, met_sla=e2e <= t_sla,
-            quality=v.quality, hedged=hedged)
+            quality=v.quality, hedged=hedged, w_queue_ms=w_queue)
         self.results.append(res)
         return res
 

@@ -29,6 +29,14 @@ class Variant:
     prefill_fn: Callable = None
     decode_fn: Callable = None
     cache_len: int = 128
+    inflight: int = 0           # requests dispatched but not finished
+
+    def estimated_wait_ms(self, profile) -> float:
+        """Queue-wait estimate for one more request on this variant.
+        The two signals overlap — observed queue waits (queue_mu, see
+        ProfileStore.observe_queue) already include time spent behind
+        in-flight work — so take the max rather than the sum."""
+        return max(self.inflight * max(profile.mu, 0.0), profile.queue_mu)
 
     def build(self, key, dtype=jnp.float32):
         self.params = M.init_params(self.cfg, key, dtype)

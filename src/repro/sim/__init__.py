@@ -1,0 +1,48 @@
+"""Discrete-event serving simulation for ModiPick at production scale.
+
+The paper (ModiPick: SLA-aware Accuracy Optimization For Mobile Deep
+Inference) evaluates model selection with a single-request closed loop
+(§4).  This package generalises that loop into an event-driven serving
+simulator — concurrent traffic, FIFO queues, heterogeneous replicas —
+so selection can be studied in the regime where queueing delay, not
+network jitter, dominates latency variability.
+
+Paper-section → code map:
+
+- §3.1 mobile inference lifecycle (uplink → inference → downlink):
+  ``engine.ServingSimulator`` request lifecycle events
+  (``events.ARRIVAL/ENQUEUE/FINISH/DEPART``), plus the FIFO-wait stage
+  the paper's single-request loop cannot express.
+- §3.2 Eq. 1 budget ``T_sla - 2*T_input``: ``core.policy.budget``;
+  the queue-aware generalisation ``T_sla - 2*T_input - W_queue(m)`` is
+  ``queueaware.queue_aware_budget`` / ``queueaware.QueueAwareSelector``.
+- §3.3 three-stage selection + EWMA profiles + cold-model refresh:
+  unchanged in ``core.policy`` / ``core.profiles``; the engine feeds
+  observed inference latency and queue waits back into the store.
+- §4 closed-loop evaluation: ``arrivals.ClosedLoopArrivals`` over a
+  single shared replica — ``core.simulate.Simulator`` is now a thin
+  wrapper that replays the paper's loop draw-for-draw.
+- Beyond-paper: ``arrivals.PoissonArrivals`` / ``TraceArrivals`` open
+  loops, ``replica.per_model_replicas`` (endpoint-per-model topology),
+  admission control via ``Replica.max_queue_depth``, and
+  ``engine.rate_sweep`` for SLA-attainment-vs-load curves
+  (``benchmarks/load_sweep.py``).
+"""
+from repro.sim.arrivals import (ArrivalProcess, ClosedLoopArrivals,
+                                PoissonArrivals, TraceArrivals)
+from repro.sim.engine import (LoadSimResult, ServingSimulator, SimRequest,
+                              rate_sweep)
+from repro.sim.events import ARRIVAL, DEPART, ENQUEUE, FINISH, EventQueue
+from repro.sim.queueaware import (QueueAwareSelector, queue_aware_budget,
+                                  shifted_store)
+from repro.sim.replica import (GaussianServiceModel, Replica, ReplicaPool,
+                               per_model_replicas, shared_replicas)
+
+__all__ = [
+    "ArrivalProcess", "ClosedLoopArrivals", "PoissonArrivals",
+    "TraceArrivals", "LoadSimResult", "ServingSimulator", "SimRequest",
+    "rate_sweep", "ARRIVAL", "DEPART", "ENQUEUE", "FINISH", "EventQueue",
+    "QueueAwareSelector", "queue_aware_budget", "shifted_store",
+    "GaussianServiceModel", "Replica", "ReplicaPool", "per_model_replicas",
+    "shared_replicas",
+]

@@ -1,0 +1,85 @@
+"""Arrival processes for the serving simulator.
+
+Three regimes:
+
+- ``ClosedLoopArrivals``: one outstanding request; the next request is
+  issued when the previous response departs (plus optional think time).
+  This is the paper's §4 evaluation loop — ``core/simulate.py`` is the
+  single-replica instance of the engine driven by this process.
+- ``PoissonArrivals``: open-loop memoryless traffic at a target rate —
+  the production regime where queueing delay appears (MDInference's
+  dominant latency source).
+- ``TraceArrivals``: replay an explicit list of arrival timestamps
+  (e.g. from a production trace or a synthetic burst pattern).
+
+Open-loop processes chain: handling arrival *i* schedules arrival
+*i+1*.  Closed-loop chains off request departure instead, so it never
+draws from the RNG and preserves the exact draw order of the original
+closed loop.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional, Sequence
+
+import numpy as np
+
+
+class ArrivalProcess:
+    closed_loop: bool = False
+
+    def first(self, rng: np.random.Generator) -> float:
+        """Time of the first arrival (ms)."""
+        return 0.0
+
+    def next_after(self, rng: np.random.Generator, t: float,
+                   n_issued: int) -> Optional[float]:
+        """Time of the next arrival given the previous chain point ``t``
+        (the previous *arrival* for open-loop, the previous *departure*
+        for closed-loop).  ``None`` means the process is exhausted."""
+        raise NotImplementedError
+
+
+@dataclass
+class ClosedLoopArrivals(ArrivalProcess):
+    """Sequential issue: next request when the previous one departs."""
+    think_ms: float = 0.0
+
+    def __post_init__(self):
+        self.closed_loop = True
+
+    def next_after(self, rng, t, n_issued):
+        return t + self.think_ms
+
+
+@dataclass
+class PoissonArrivals(ArrivalProcess):
+    """Open-loop Poisson traffic at ``rate_rps`` requests per second."""
+    rate_rps: float
+
+    def __post_init__(self):
+        assert self.rate_rps > 0.0
+        self._gap_ms = 1000.0 / self.rate_rps
+
+    def first(self, rng):
+        return float(rng.exponential(self._gap_ms))
+
+    def next_after(self, rng, t, n_issued):
+        return t + float(rng.exponential(self._gap_ms))
+
+
+@dataclass
+class TraceArrivals(ArrivalProcess):
+    """Replay explicit arrival timestamps (ms, ascending)."""
+    times_ms: Sequence[float]
+
+    def first(self, rng):
+        return float(self.times_ms[0])
+
+    def next_after(self, rng, t, n_issued):
+        if n_issued >= len(self.times_ms):
+            return None
+        return float(self.times_ms[n_issued])
+
+    def __len__(self) -> int:
+        return len(self.times_ms)

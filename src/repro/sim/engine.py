@@ -1,0 +1,269 @@
+"""The discrete-event serving simulator.
+
+Request lifecycle (all times ms):
+
+    ARRIVAL ── uplink (T_input) ──▶ ENQUEUE ── FIFO wait ──▶ service
+            ── inference ──▶ FINISH ── downlink (T_input) ──▶ DEPART
+
+At ENQUEUE the policy selects a model (queue-aware mode presents the
+policy with per-model budgets ``T_sla - 2*T_input - W_queue(m)`` via
+``queueaware.shifted_store``), the request joins the FIFO of the
+least-loaded capable replica, and — exactly like the live serving path —
+the profile store receives the *inference* latency at FINISH and the
+observed queue wait at service start (telemetry mirroring
+``serving/batcher.py``).
+
+Driven by ``ClosedLoopArrivals`` over a single shared replica this
+engine replays the paper's §4 closed loop draw-for-draw —
+``core/simulate.Simulator`` is now a thin wrapper around it.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Sequence, Union
+
+import numpy as np
+
+from repro.core.netmodel import NetworkModel
+from repro.core.policy import Policy, budget
+from repro.core.profiles import ProfileStore
+from repro.core.zoo import ZooEntry, make_store, true_profiles
+from repro.sim.arrivals import ArrivalProcess, ClosedLoopArrivals
+from repro.sim.events import ARRIVAL, DEPART, ENQUEUE, FINISH, EventQueue
+from repro.sim.queueaware import QueueAwareSelector
+from repro.sim.replica import (GaussianServiceModel, Replica, ReplicaPool,
+                               shared_replicas)
+
+
+@dataclass
+class SimRequest:
+    rid: int
+    arrival_ms: float
+    t_input_ms: float = 0.0
+    model: str = ""
+    replica: str = ""
+    fallback: bool = False
+    rejected: bool = False
+    enqueue_ms: float = 0.0
+    service_start_ms: float = 0.0
+    service_ms: float = 0.0
+    finish_ms: float = 0.0
+    depart_ms: float = 0.0
+
+    @property
+    def queue_wait_ms(self) -> float:
+        return self.service_start_ms - self.enqueue_ms
+
+    @property
+    def e2e_ms(self) -> float:
+        # Component sum (not event-time subtraction): uplink + FIFO wait
+        # + inference + downlink.  Bit-identical to the legacy closed
+        # loop's ``2*T_input + T_inf`` at zero queue wait.
+        return 2.0 * self.t_input_ms + self.queue_wait_ms + self.service_ms
+
+
+@dataclass
+class LoadSimResult:
+    policy: str
+    t_sla: float
+    n_arrived: int
+    n_completed: int
+    n_rejected: int
+    sla_attainment: float        # met / arrived (rejections are misses)
+    mean_accuracy: float         # over completed requests
+    mean_latency: float          # e2e ms over completed
+    p50_latency: float
+    p99_latency: float
+    mean_queue_wait: float
+    p99_queue_wait: float
+    peak_queue_depth: int
+    model_usage: Dict[str, float]          # fraction of completed
+    replica_utilization: Dict[str, float]  # busy time / horizon
+    horizon_ms: float = 0.0
+
+    @property
+    def violation_rate(self) -> float:
+        return 1.0 - self.sla_attainment
+
+
+class ServingSimulator:
+    """Event-driven serving over a pool of heterogeneous replicas."""
+
+    def __init__(self, entries: Sequence[ZooEntry], network: NetworkModel,
+                 replicas: Optional[Union[ReplicaPool, List[Replica]]] = None,
+                 *, seed: int = 0, alpha: float = 0.1, cold_age: int = 500,
+                 cold_probe: bool = True, spike_prob: float = 0.0,
+                 spike_mult: float = 10.0, queue_aware: bool = False):
+        self.entries = list(entries)
+        self.network = network
+        if replicas is None:
+            replicas = shared_replicas(1)
+        self.pool = (replicas if isinstance(replicas, ReplicaPool)
+                     else ReplicaPool(replicas))
+        self.seed = seed
+        self.alpha = alpha
+        self.cold_age = cold_age
+        self.cold_probe = cold_probe
+        self.spike_prob = spike_prob
+        self.spike_mult = spike_mult
+        self.queue_aware = queue_aware
+
+    # ------------------------------------------------------------------
+    def run(self, policy: Policy, t_sla: float,
+            n_requests: int = 10_000,
+            arrivals: Optional[ArrivalProcess] = None,
+            warm: bool = True,
+            store: Optional[ProfileStore] = None) -> LoadSimResult:
+        arrivals = arrivals or ClosedLoopArrivals()
+        rng = np.random.default_rng(self.seed)
+        store = store or make_store(self.entries, alpha=self.alpha,
+                                    cold_age=self.cold_age, warm=warm)
+        truth = true_profiles(self.entries)
+        svc = GaussianServiceModel(truth, spike_prob=self.spike_prob,
+                                   spike_mult=self.spike_mult)
+        selector = QueueAwareSelector(policy) if self.queue_aware else None
+        self.pool.reset()
+
+        evq = EventQueue()
+        completed: List[SimRequest] = []
+        rejected: List[SimRequest] = []
+        n_issued = 0
+        if n_requests > 0:
+            evq.push(arrivals.first(rng), ARRIVAL, 0)
+            n_issued = 1
+
+        def start_service(replica: Replica, now: float) -> None:
+            req: SimRequest = replica.queue.popleft()
+            req.service_start_ms = now
+            store.observe_queue(req.model, req.queue_wait_ms)
+            req.service_ms = svc.sample(rng, req.model, replica.speed)
+            replica.current = req
+            replica.busy_until = now + req.service_ms
+            evq.push(now + req.service_ms, FINISH, (replica, req))
+
+        while evq:
+            ev = evq.pop()
+            now = ev.time
+
+            if ev.kind == ARRIVAL:
+                req = SimRequest(rid=ev.data, arrival_ms=now)
+                req.t_input_ms = float(self.network.sample(rng, 1)[0])
+                evq.push(now + req.t_input_ms, ENQUEUE, req)
+                if not arrivals.closed_loop and n_issued < n_requests:
+                    t_next = arrivals.next_after(rng, now, n_issued)
+                    if t_next is not None:
+                        evq.push(t_next, ARRIVAL, n_issued)
+                        n_issued += 1
+
+            elif ev.kind == ENQUEUE:
+                req = ev.data
+                req.enqueue_ms = now
+                t_budget = budget(t_sla, req.t_input_ms)
+                if selector is not None:
+                    trace = selector.select_traced(
+                        store, t_budget,
+                        lambda m: self.pool.queue_wait(m, now, store), rng)
+                else:
+                    trace = policy.select_traced(store, t_budget, rng)
+                req.model = trace.chosen
+                req.fallback = trace.fallback
+                store.mark_selected(req.model)
+                replica = self.pool.best_for(req.model, now, store)
+                req.replica = replica.name
+                if replica.full():
+                    req.rejected = True
+                    req.depart_ms = now
+                    rejected.append(req)
+                    if arrivals.closed_loop and n_issued < n_requests:
+                        evq.push(arrivals.next_after(rng, now, n_issued),
+                                 ARRIVAL, n_issued)
+                        n_issued += 1
+                    continue
+                replica.queue.append(req)
+                replica.peak_depth = max(replica.peak_depth, replica.depth())
+                if replica.current is None:
+                    start_service(replica, now)
+
+            elif ev.kind == FINISH:
+                replica, req = ev.data
+                req.finish_ms = now
+                replica.current = None
+                replica.n_served += 1
+                replica.busy_ms += req.service_ms
+                store.observe(req.model, req.service_ms)
+                # Cold-model refresh (§3.3): probe one stale model
+                # out-of-band, as in the original closed loop.
+                if self.cold_probe:
+                    cold = store.cold_models()
+                    if cold:
+                        probe = cold[int(rng.integers(len(cold)))]
+                        store.observe(probe, svc.sample(rng, probe))
+                        store.profiles[probe].last_selected = store.step
+                evq.push(now + req.t_input_ms, DEPART, req)
+                if replica.queue:
+                    start_service(replica, now)
+
+            elif ev.kind == DEPART:
+                req = ev.data
+                req.depart_ms = now
+                completed.append(req)
+                if arrivals.closed_loop and n_issued < n_requests:
+                    evq.push(arrivals.next_after(rng, now, n_issued),
+                             ARRIVAL, n_issued)
+                    n_issued += 1
+
+        name = selector.name if selector is not None else \
+            getattr(policy, "name", str(policy))
+        return self._summarise(name, t_sla, truth, completed, rejected)
+
+    # ------------------------------------------------------------------
+    def _summarise(self, policy_name, t_sla, truth, completed, rejected
+                   ) -> LoadSimResult:
+        n_arrived = len(completed) + len(rejected)
+        if not completed:
+            return LoadSimResult(
+                policy=policy_name, t_sla=t_sla,
+                n_arrived=n_arrived, n_completed=0, n_rejected=len(rejected),
+                sla_attainment=0.0, mean_accuracy=0.0, mean_latency=0.0,
+                p50_latency=0.0, p99_latency=0.0, mean_queue_wait=0.0,
+                p99_queue_wait=0.0, peak_queue_depth=0, model_usage={},
+                replica_utilization={})
+        e2e = np.array([r.e2e_ms for r in completed])
+        waits = np.array([r.queue_wait_ms for r in completed])
+        met = int((e2e <= t_sla).sum())
+        usage: Dict[str, int] = {}
+        for r in completed:
+            usage[r.model] = usage.get(r.model, 0) + 1
+        first = min(r.arrival_ms for r in completed)
+        last = max(r.depart_ms for r in completed)
+        horizon = max(last - first, 1e-9)
+        return LoadSimResult(
+            policy=policy_name, t_sla=t_sla,
+            n_arrived=n_arrived, n_completed=len(completed),
+            n_rejected=len(rejected),
+            sla_attainment=met / max(n_arrived, 1),
+            mean_accuracy=float(np.mean(
+                [truth[r.model].top1 / 100.0 for r in completed])),
+            mean_latency=float(e2e.mean()),
+            p50_latency=float(np.percentile(e2e, 50)),
+            p99_latency=float(np.percentile(e2e, 99)),
+            mean_queue_wait=float(waits.mean()),
+            p99_queue_wait=float(np.percentile(waits, 99)),
+            peak_queue_depth=max(r.peak_depth for r in self.pool.replicas),
+            model_usage={k: v / len(completed)
+                         for k, v in sorted(usage.items())},
+            replica_utilization={r.name: r.busy_ms / horizon
+                                 for r in self.pool.replicas},
+            horizon_ms=horizon)
+
+
+def rate_sweep(sim: ServingSimulator, policy_fn, rates_rps: Sequence[float],
+               t_sla: float, n_requests: int = 2000) -> List[LoadSimResult]:
+    """Arrival-rate sweep: SLA attainment vs offered load.
+
+    ``policy_fn()`` builds a fresh policy per point (stateful policies
+    like ``StaticGreedy`` must not leak across runs)."""
+    from repro.sim.arrivals import PoissonArrivals
+    return [sim.run(policy_fn(), t_sla, n_requests,
+                    arrivals=PoissonArrivals(rate))
+            for rate in rates_rps]

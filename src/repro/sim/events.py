@@ -1,0 +1,48 @@
+"""Discrete-event core: a time-ordered event queue with stable FIFO
+tie-breaking.
+
+Every simulation entity (arrival generator, replica, network) interacts
+through this queue only; handlers never advance time themselves.  Ties
+are broken by insertion order (monotonic sequence number) so runs are
+bit-deterministic under a fixed seed regardless of heap internals.
+"""
+from __future__ import annotations
+
+import heapq
+from dataclasses import dataclass, field
+from typing import Any, List
+
+# Event kinds (request lifecycle: uplink -> queue -> inference -> downlink).
+ARRIVAL = "arrival"    # request leaves the device; uplink transfer starts
+ENQUEUE = "enqueue"    # input arrived at the server; select model + queue
+FINISH = "finish"      # inference finished on a replica
+DEPART = "depart"      # downlink done; response reached the device
+
+
+@dataclass(order=True)
+class Event:
+    time: float
+    seq: int
+    kind: str = field(compare=False)
+    data: Any = field(compare=False, default=None)
+
+
+class EventQueue:
+    def __init__(self) -> None:
+        self._heap: List[Event] = []
+        self._seq = 0
+
+    def push(self, time: float, kind: str, data: Any = None) -> Event:
+        ev = Event(time=float(time), seq=self._seq, kind=kind, data=data)
+        self._seq += 1
+        heapq.heappush(self._heap, ev)
+        return ev
+
+    def pop(self) -> Event:
+        return heapq.heappop(self._heap)
+
+    def __len__(self) -> int:
+        return len(self._heap)
+
+    def __bool__(self) -> bool:
+        return bool(self._heap)

@@ -1,0 +1,137 @@
+"""Replicas: FIFO-queued serving endpoints over a heterogeneous pool.
+
+A ``Replica`` models one serving endpoint (the paper's per-model GPU
+endpoint, or a TPU slice from ``core/tpu_pool.py``): a single server with
+a FIFO queue, a speed factor (heterogeneity), and an optional queue-depth
+cap (admission control).  ``ReplicaPool`` routes a selected model to the
+least-loaded capable replica and answers the queue-wait estimates
+``W_queue(m)`` that the queue-aware policy consumes.
+
+``GaussianServiceModel`` is the ground-truth latency process shared with
+the closed-loop simulator: truncated normal per model plus the optional
+co-tenant spike process of ``core/simulate.py``.
+"""
+from __future__ import annotations
+
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Deque, Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.profiles import ProfileStore
+from repro.core.zoo import ZooEntry
+
+
+@dataclass
+class GaussianServiceModel:
+    """True per-model inference latency: N(mu, sigma) truncated at a
+    floor, optionally hit by a multiplicative co-tenant spike."""
+    truth: Dict[str, ZooEntry]
+    spike_prob: float = 0.0
+    spike_mult: float = 10.0
+    floor_ms: float = 0.05
+
+    def sample(self, rng: np.random.Generator, model: str,
+               speed: float = 1.0) -> float:
+        e = self.truth[model]
+        t = max(self.floor_ms, rng.normal(e.mu_ms, e.sigma_ms))
+        if self.spike_prob > 0 and rng.random() < self.spike_prob:
+            t *= self.spike_mult
+        return t / speed
+
+
+@dataclass
+class Replica:
+    """One FIFO-queued server.  ``models=()`` means it serves the whole
+    zoo (shared endpoint); otherwise only the named models."""
+    name: str
+    models: Tuple[str, ...] = ()
+    speed: float = 1.0
+    max_queue_depth: Optional[int] = None
+
+    queue: Deque = field(default_factory=deque, repr=False)
+    current: Optional[object] = field(default=None, repr=False)
+    busy_until: float = 0.0
+    n_served: int = 0
+    busy_ms: float = 0.0
+    peak_depth: int = 0
+
+    def serves(self, model: str) -> bool:
+        return not self.models or model in self.models
+
+    def depth(self) -> int:
+        return len(self.queue) + (1 if self.current is not None else 0)
+
+    def full(self) -> bool:
+        return (self.max_queue_depth is not None
+                and self.depth() >= self.max_queue_depth)
+
+    def estimated_wait(self, now: float, store: ProfileStore) -> float:
+        """Queue-wait estimate using what the router knows: the profile
+        store's mean latency per queued model plus the in-flight
+        remainder.  This is W_queue(m) for any model routed here."""
+        w = max(0.0, self.busy_until - now) if self.current is not None else 0.0
+        for req in self.queue:
+            w += store[req.model].mu / self.speed
+        return w
+
+    def reset(self) -> None:
+        self.queue.clear()
+        self.current = None
+        self.busy_until = 0.0
+        self.n_served = 0
+        self.busy_ms = 0.0
+        self.peak_depth = 0
+
+
+class ReplicaPool:
+    def __init__(self, replicas: List[Replica]):
+        assert replicas, "need at least one replica"
+        self.replicas = list(replicas)
+
+    def candidates(self, model: str) -> List[Replica]:
+        out = [r for r in self.replicas if r.serves(model)]
+        if not out:
+            raise KeyError(f"no replica serves model {model!r}")
+        return out
+
+    def best_for(self, model: str, now: float,
+                 store: ProfileStore) -> Replica:
+        """Least-estimated-wait capable replica (ties: pool order)."""
+        return min(self.candidates(model),
+                   key=lambda r: r.estimated_wait(now, store))
+
+    def queue_wait(self, model: str, now: float,
+                   store: ProfileStore) -> float:
+        """W_queue(m): wait at the replica that would serve ``model``."""
+        return min(r.estimated_wait(now, store)
+                   for r in self.candidates(model))
+
+    def reset(self) -> None:
+        for r in self.replicas:
+            r.reset()
+
+
+def shared_replicas(n: int = 1, *, speeds: Optional[List[float]] = None,
+                    max_queue_depth: Optional[int] = None) -> ReplicaPool:
+    """``n`` replicas that each serve every model (shared endpoints)."""
+    speeds = speeds or [1.0] * n
+    assert len(speeds) == n
+    return ReplicaPool([
+        Replica(name=f"r{i}", models=(), speed=s,
+                max_queue_depth=max_queue_depth)
+        for i, s in enumerate(speeds)])
+
+
+def per_model_replicas(entries: List[ZooEntry], *,
+                       replicas_per_model: int = 1,
+                       speed: float = 1.0,
+                       max_queue_depth: Optional[int] = None) -> ReplicaPool:
+    """The paper's topology: a dedicated endpoint per zoo member."""
+    out = []
+    for e in entries:
+        for k in range(replicas_per_model):
+            out.append(Replica(name=f"{e.name}/{k}", models=(e.name,),
+                               speed=speed, max_queue_depth=max_queue_depth))
+    return ReplicaPool(out)

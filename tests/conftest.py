@@ -1,0 +1,102 @@
+"""Shared test plumbing.
+
+Vendored property-sweep shim: the suite was written against
+``hypothesis``, which is not available in the pinned container.  This
+module exposes the tiny subset the tests use (``given``, ``settings``,
+``st.floats/integers/lists/tuples/sampled_from``) backed by a seeded
+numpy RNG: ``@given`` expands the test into ``max_examples`` randomized
+calls with a per-test deterministic seed.  When the real ``hypothesis``
+is importable it is re-exported unchanged, so nothing here diverges from
+upstream semantics on machines that have it.
+
+Test modules import via ``from conftest import given, settings, st``.
+
+``PROPTEST_MAX_EXAMPLES`` (env) caps the per-test example count for
+quick local iteration, e.g. ``PROPTEST_MAX_EXAMPLES=5 pytest -q``.
+"""
+import os
+import zlib
+
+try:  # pragma: no cover - container has no hypothesis; keep parity if added
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:
+    HAVE_HYPOTHESIS = False
+
+    import numpy as np
+
+    _DEFAULT_EXAMPLES = 20
+
+    class _Strategy:
+        def __init__(self, draw):
+            self._draw = draw
+
+        def example(self, rng):
+            return self._draw(rng)
+
+    class st:  # noqa: N801 - mimics ``hypothesis.strategies`` module name
+        @staticmethod
+        def floats(min_value, max_value):
+            return _Strategy(
+                lambda rng: float(rng.uniform(min_value, max_value)))
+
+        @staticmethod
+        def integers(min_value, max_value):
+            return _Strategy(
+                lambda rng: int(rng.integers(min_value, max_value + 1)))
+
+        @staticmethod
+        def sampled_from(elements):
+            elements = list(elements)
+            return _Strategy(
+                lambda rng: elements[int(rng.integers(len(elements)))])
+
+        @staticmethod
+        def lists(elements, min_size=0, max_size=10):
+            def draw(rng):
+                n = int(rng.integers(min_size, max_size + 1))
+                return [elements.example(rng) for _ in range(n)]
+            return _Strategy(draw)
+
+        @staticmethod
+        def tuples(*elements):
+            return _Strategy(
+                lambda rng: tuple(e.example(rng) for e in elements))
+
+    def settings(max_examples=_DEFAULT_EXAMPLES, deadline=None, **_kw):
+        def deco(fn):
+            fn._prop_max_examples = max_examples
+            return fn
+        return deco
+
+    def given(*strategies):
+        def deco(fn):
+            def sweep():
+                # Resolve max_examples at call time so @settings works in
+                # either decorator order (above or below @given).
+                n = getattr(sweep, "_prop_max_examples",
+                            getattr(fn, "_prop_max_examples",
+                                    _DEFAULT_EXAMPLES))
+                cap = os.environ.get("PROPTEST_MAX_EXAMPLES")
+                if cap:
+                    n = min(n, int(cap))
+                rng = np.random.default_rng(
+                    zlib.crc32(fn.__qualname__.encode()))
+                for i in range(n):
+                    values = [s.example(rng) for s in strategies]
+                    try:
+                        fn(*values)
+                    except Exception as e:
+                        # plain Exception only: pytest.skip/xfail and
+                        # KeyboardInterrupt must propagate untouched
+                        raise AssertionError(
+                            f"falsifying example (#{i + 1}/{n}) for "
+                            f"{fn.__name__}: args={values!r}") from e
+
+            sweep.__name__ = fn.__name__
+            sweep.__doc__ = fn.__doc__
+            sweep.__module__ = fn.__module__
+            return sweep
+        return deco
+
+__all__ = ["given", "settings", "st", "HAVE_HYPOTHESIS"]

@@ -61,3 +61,27 @@ def test_slots_reused_and_throughput_counted():
     engine.run_to_completion()
     assert engine.n_steps > 0
     assert all(not s for s in engine.slots)
+
+
+def test_queue_telemetry_feeds_profile_store():
+    """Queue waits observed at slot insertion flow into the profile
+    store's W_queue estimate (the queue-aware routing signal)."""
+    from repro.core.profiles import ModelProfile, ProfileStore
+
+    cfg = get_config("qwen2-1.5b").reduced()
+    params = M.init_params(cfg, KEY, jnp.float32)
+    store = ProfileStore([ModelProfile(name="qwen", accuracy=0.9)])
+    rng = np.random.default_rng(2)
+    engine = ContinuousBatcher(cfg, params, max_slots=1, cache_len=64,
+                               store=store, model_name="qwen")
+    for i in range(3):  # 1 slot + 3 requests => real queueing
+        engine.submit(GenRequest(
+            rid=i, prompt=rng.integers(0, 100, size=6, dtype=np.int32),
+            max_new=3))
+    assert engine.queue_depth() == 3
+    engine.run_to_completion()
+    assert engine.queue_depth() == 0
+    assert store["qwen"].queue_obs == 3
+    assert store.queue_wait("qwen") > 0.0
+    tel = engine.telemetry()
+    assert tel["model"] == "qwen" and tel["queue_depth"] == 0

@@ -1,9 +1,10 @@
-"""Property tests for the ModiPick selection policies (hypothesis)."""
+"""Property tests for the ModiPick selection policies (seeded sweeps via
+the conftest shim; uses real hypothesis when available)."""
 import math
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from conftest import given, settings, st
 
 from repro.core.policy import (DynamicGreedy, ModiPick, PureRandom,
                                RelatedAccurate, RelatedRandom, StaticGreedy,
@@ -95,6 +96,27 @@ def test_exploration_set_policies_share_stages(pool, t_budget, threshold, seed):
         assert set(mp.eligible) == set(rr.eligible) == set(ra.eligible)
         accs = [store[n].accuracy for n in ra.eligible]
         assert store[ra.chosen].accuracy == max(accs)
+
+
+@given(pool_strategy, st.floats(10.0, 500.0), st.integers(0, 2**31 - 1))
+@settings(max_examples=200, deadline=None)
+def test_dynamic_greedy_never_over_budget(pool, t_budget, seed):
+    """§3.2.2 invariant: DynamicGreedy only returns a model with
+    μ > T_budget via the explicit fastest-model fallback — and falls
+    back only when *no* model fits the budget."""
+    store = store_from(pool)
+    rng = np.random.default_rng(seed)
+    trace = DynamicGreedy().select_traced(store, t_budget, rng)
+    if trace.fallback:
+        assert all(p.mu > t_budget for p in store.profiles.values())
+        fastest = min(store.profiles.values(), key=lambda p: p.mu).name
+        assert trace.chosen == fastest
+    else:
+        assert store[trace.chosen].mu <= t_budget
+        # greedy: nothing more accurate also fits
+        for p in store.profiles.values():
+            if p.accuracy > store[trace.chosen].accuracy:
+                assert p.mu > t_budget
 
 
 def test_static_greedy_frozen():

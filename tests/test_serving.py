@@ -87,6 +87,29 @@ def test_hedging_caps_straggler_tail():
     assert hedge["sla_attainment"] >= no_hedge["sla_attainment"]
 
 
+def test_queue_aware_executor_prices_out_backlogged_variant():
+    """With an injected 200ms backlog estimate on 'large', queue-aware
+    routing excludes it (shifted μ blows the budget) and shifts traffic
+    to 'medium' — while plain routing keeps using 'large'."""
+    waits = {"small": 0.0, "medium": 0.0, "large": 200.0}
+
+    def run(queue_aware):
+        rng = np.random.default_rng(6)
+        ex = PoolExecutor(make_pool(rng), NetworkModel(15.0, 7.0),
+                          ModiPick(t_threshold=20.0), seed=6,
+                          queue_aware=queue_aware,
+                          w_queue_fn=lambda n: waits[n])
+        ex.warm_up(np.zeros((1, 4), np.int32))
+        for _ in range(200):
+            ex.execute(np.zeros((1, 4), np.int32), t_sla=150.0)
+        return ex.summary()
+
+    qa, plain = run(True), run(False)
+    assert qa["usage"].get("large", 0.0) < 0.05
+    assert qa["usage"].get("medium", 0.0) > 0.3
+    assert plain["usage"].get("large", 0.0) > 0.2
+
+
 def test_sigma_aware_routing_derates_straggling_variant():
     """ModiPick's σ-aware stage 1 shifts traffic away from a variant whose
     latency becomes erratic — the paper's co-tenant scenario, live."""
