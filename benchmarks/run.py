@@ -1,5 +1,6 @@
 # One function per paper table/figure. Prints ``name,us_per_call,derived`` CSV.
 import argparse
+import json
 import sys
 import traceback
 
@@ -9,13 +10,18 @@ def main() -> None:
     ap.add_argument("--only", default=None,
                     help="comma-separated benchmark names (default: all)")
     ap.add_argument("--fast", action="store_true",
-                    help="skip the live-pool serving benchmark")
+                    help="skip the live-pool serving benchmark and cap "
+                         "policy_throughput at small batches")
     ap.add_argument("--fail-fast", action="store_true",
                     help="abort on the first failing benchmark")
+    ap.add_argument("--json", action="store_true",
+                    help="also write BENCH_<name>.json per benchmark "
+                         "(perf trajectory record)")
     args = ap.parse_args()
 
     from benchmarks import load_sweep as ls
     from benchmarks import paper_figures as pf
+    from benchmarks import policy_throughput as pt
     from benchmarks import roofline as rl
 
     benches = {
@@ -32,6 +38,8 @@ def main() -> None:
         "kernels": rl.kernel_micro,
         "tpu_pool": _tpu_pool,
         "load_sweep": ls.sweep_rows,
+        "sla_frontier": ls.frontier_rows,
+        "policy_throughput": lambda: pt.bench_rows(fast=args.fast),
     }
     if not args.fast:
         benches["live_pool"] = _live_pool
@@ -45,8 +53,15 @@ def main() -> None:
     failures = 0
     for name in selected:
         try:
-            for row in benches[name]():
+            rows = list(benches[name]())
+            for row in rows:
                 print(f"{row[0]},{row[1]:.3f},{row[2]}")
+            if args.json:
+                with open(f"BENCH_{name}.json", "w") as fh:
+                    json.dump({"benchmark": name,
+                               "rows": [{"name": r[0], "us_per_call": r[1],
+                                         "derived": r[2]} for r in rows]},
+                              fh, indent=2)
         except Exception as e:
             failures += 1
             traceback.print_exc(file=sys.stderr)

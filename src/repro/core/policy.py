@@ -2,7 +2,13 @@
 the paper's baselines (§3.2 static/dynamic greedy; §4.4 pure random,
 related random, related accurate).
 
-Every policy implements ``select(store, t_budget, rng) -> model name``.
+Every policy implements ``select(store, t_budget, rng) -> model name``
+and ``select_batch(store, t_budgets, rng) -> names`` (the vectorized
+fan-out in ``core.policy_vec``).  The scalar path is a batch-of-1 view
+over the store's :class:`~repro.core.profiles.ProfileTable` snapshot —
+the accuracy-descending order is cached on the store and invalidated by
+its dirty flag, so nothing here re-sorts the pool per request.
+
 Time units are milliseconds throughout, matching the paper.
 """
 from __future__ import annotations
@@ -13,7 +19,7 @@ from typing import List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from repro.core.profiles import ModelProfile, ProfileStore
+from repro.core.profiles import ProfileStore, ProfileTable
 
 EPS = 1e-9
 
@@ -45,34 +51,56 @@ class Policy:
                       rng: np.random.Generator) -> SelectionTrace:
         raise NotImplementedError
 
+    def select_batch(self, store: ProfileStore, t_budgets,
+                     rng: np.random.Generator, *,
+                     backend: Optional[str] = None) -> List[str]:
+        """Vectorized selection for a batch of budgets; see
+        ``repro.core.policy_vec.select_batch``."""
+        from repro.core import policy_vec
+        return policy_vec.select_batch(self, store, t_budgets, rng,
+                                       backend=backend)
+
 
 def _fastest(store: ProfileStore) -> str:
-    return min(store.profiles.values(), key=lambda p: p.mu).name
-
-
-def _by_accuracy(store: ProfileStore) -> List[ModelProfile]:
-    return sorted(store.profiles.values(), key=lambda p: -p.accuracy)
+    tab = store.table()
+    return tab.names[tab.fastest]
 
 
 class StaticGreedy(Policy):
     """§3.2.1: development-time pick — most accurate model whose average
     inference time fits the *SLA itself* (no network correction).  The
-    chosen model is frozen at construction time against the dev-time
-    profiles, exactly like a developer hard-coding an endpoint."""
+    chosen model is frozen the first time the policy sees a store,
+    exactly like a developer hard-coding an endpoint.  Presenting a
+    *different* store re-freezes against it (each store is a different
+    dev-time profiling run), so one policy instance can be reused across
+    ``rate_sweep`` points without leaking the previous run's pick;
+    ``reset()`` forces the next call to re-freeze.  Store identity
+    follows ``store.base``, so the per-selection shifted views built by
+    queue-aware wrapping do not thaw the pick."""
     name = "static_greedy"
 
     def __init__(self, t_sla: float):
         self.t_sla = t_sla
         self._frozen: Optional[str] = None
+        self._frozen_store: Optional[ProfileStore] = None
+
+    def reset(self) -> None:
+        self._frozen = None
+        self._frozen_store = None
+
+    def freeze_pick(self, tab: ProfileTable) -> str:
+        """Dev-time choice against a snapshot: most accurate model with
+        μ ≤ T_sla, else the fastest."""
+        for i in tab.acc_order:
+            if tab.mu[i] <= self.t_sla:
+                return tab.names[i]
+        return tab.names[tab.fastest]
 
     def select_traced(self, store, t_budget, rng) -> SelectionTrace:
-        if self._frozen is None:
-            for p in _by_accuracy(store):
-                if p.mu <= self.t_sla:
-                    self._frozen = p.name
-                    break
-            else:
-                self._frozen = _fastest(store)
+        root = getattr(store, "base", store)
+        if self._frozen is None or self._frozen_store is not root:
+            self._frozen = self.freeze_pick(root.table())
+            self._frozen_store = root
         return SelectionTrace(chosen=self._frozen)
 
 
@@ -81,10 +109,11 @@ class DynamicGreedy(Policy):
     name = "dynamic_greedy"
 
     def select_traced(self, store, t_budget, rng) -> SelectionTrace:
-        for p in _by_accuracy(store):
-            if p.mu <= t_budget:
-                return SelectionTrace(chosen=p.name)
-        return SelectionTrace(chosen=_fastest(store), fallback=True)
+        tab = store.table()
+        for i in tab.acc_order:
+            if tab.mu[i] <= t_budget:
+                return SelectionTrace(chosen=tab.names[i])
+        return SelectionTrace(chosen=tab.names[tab.fastest], fallback=True)
 
 
 class ModiPick(Policy):
@@ -109,50 +138,65 @@ class ModiPick(Policy):
         self.gamma = gamma
 
     # -- stage 1: greedy base pick (Eq. 2) ------------------------------
-    def _base_model(self, store, t_u, t_l) -> Optional[str]:
-        for p in _by_accuracy(store):
-            if p.mu + p.sigma < t_u and p.mu - p.sigma < t_l:
-                return p.name
+    def _base_index(self, tab: ProfileTable, t_u, t_l) -> Optional[int]:
+        for i in tab.acc_order:
+            if tab.mu[i] + tab.sigma[i] < t_u and tab.mu[i] - tab.sigma[i] < t_l:
+                return int(i)
         return None
 
+    def _base_model(self, store, t_u, t_l) -> Optional[str]:
+        tab = store.table()
+        i = self._base_index(tab, t_u, t_l)
+        return None if i is None else tab.names[i]
+
     # -- stage 2: exploration set --------------------------------------
-    def _eligible(self, store, base: str, t_u, t_l) -> List[str]:
-        bp = store[base]
-        half = abs(t_l - bp.mu) + bp.sigma
+    def _eligible_indices(self, tab: ProfileTable, base_idx: int,
+                          t_u, t_l) -> List[int]:
+        half = abs(t_l - tab.mu[base_idx]) + tab.sigma[base_idx]
         lo, hi = t_l - half, t_l + half
-        out = []
-        for p in store.profiles.values():
-            if lo <= p.mu <= hi and p.mu + p.sigma < t_u:
-                out.append(p.name)
-        if base not in out:  # base always eligible by construction
-            out.append(base)
+        mask = (lo <= tab.mu) & (tab.mu <= hi) & (tab.mu + tab.sigma < t_u)
+        out = [int(i) for i in np.flatnonzero(mask)]
+        if base_idx not in out:  # base always eligible by construction
+            out.append(base_idx)
         return out
 
+    def _eligible(self, store, base: str, t_u, t_l) -> List[str]:
+        tab = store.table()
+        return [tab.names[i]
+                for i in self._eligible_indices(tab, tab.index[base], t_u, t_l)]
+
     # -- stage 3: utility-weighted sampling (Eqs. 3–4) ------------------
-    def _probs(self, store, eligible: Sequence[str], t_u, t_l) -> np.ndarray:
-        u = np.empty(len(eligible))
-        for i, name in enumerate(eligible):
-            p = store[name]
-            num = t_u - (p.mu + p.sigma)  # > 0 by stage-2 constraint
-            den = max(abs(t_l - p.mu), EPS)
-            u[i] = max(p.accuracy, EPS) ** self.gamma * num / den
+    def _probs_indices(self, tab: ProfileTable, idxs: Sequence[int],
+                       t_u, t_l) -> np.ndarray:
+        mu, sigma = tab.mu[idxs], tab.sigma[idxs]
+        num = t_u - (mu + sigma)  # > 0 by stage-2 constraint
+        den = np.maximum(np.abs(t_l - mu), EPS)
+        u = np.maximum(tab.accuracy[idxs], EPS) ** self.gamma * num / den
         total = u.sum()
         if not math.isfinite(total) or total <= 0:
-            return np.full(len(eligible), 1.0 / len(eligible))
+            return np.full(len(u), 1.0 / len(u))
         return u / total
 
+    def _probs(self, store, eligible: Sequence[str], t_u, t_l) -> np.ndarray:
+        tab = store.table()
+        return self._probs_indices(tab, [tab.index[n] for n in eligible],
+                                   t_u, t_l)
+
     def select_traced(self, store, t_budget, rng) -> SelectionTrace:
+        tab = store.table()
         t_u = t_budget
         t_l = t_u - self.t_threshold
-        base = self._base_model(store, t_u, t_l)
-        if base is None:
+        base_idx = self._base_index(tab, t_u, t_l)
+        if base_idx is None:
             # best-effort fallback: fastest model (§3.3.1)
-            return SelectionTrace(chosen=_fastest(store), fallback=True)
-        eligible = self._eligible(store, base, t_u, t_l)
-        probs = self._probs(store, eligible, t_u, t_l)
-        idx = int(rng.choice(len(eligible), p=probs))
-        return SelectionTrace(chosen=eligible[idx], base=base,
-                              eligible=tuple(eligible), probs=tuple(probs))
+            return SelectionTrace(chosen=tab.names[tab.fastest], fallback=True)
+        idxs = self._eligible_indices(tab, base_idx, t_u, t_l)
+        probs = self._probs_indices(tab, idxs, t_u, t_l)
+        pick = int(rng.choice(len(idxs), p=probs))
+        return SelectionTrace(chosen=tab.names[idxs[pick]],
+                              base=tab.names[base_idx],
+                              eligible=tuple(tab.names[i] for i in idxs),
+                              probs=tuple(probs))
 
 
 class PureRandom(Policy):
@@ -160,8 +204,8 @@ class PureRandom(Policy):
     name = "pure_random"
 
     def select_traced(self, store, t_budget, rng) -> SelectionTrace:
-        names = store.names()
-        return SelectionTrace(chosen=names[int(rng.integers(len(names)))])
+        tab = store.table()
+        return SelectionTrace(chosen=tab.names[int(rng.integers(len(tab)))])
 
 
 class _ExplorationSetPolicy(ModiPick):
@@ -171,14 +215,17 @@ class _ExplorationSetPolicy(ModiPick):
         raise NotImplementedError
 
     def select_traced(self, store, t_budget, rng) -> SelectionTrace:
+        tab = store.table()
         t_u = t_budget
         t_l = t_u - self.t_threshold
-        base = self._base_model(store, t_u, t_l)
-        if base is None:
-            return SelectionTrace(chosen=_fastest(store), fallback=True)
-        eligible = self._eligible(store, base, t_u, t_l)
+        base_idx = self._base_index(tab, t_u, t_l)
+        if base_idx is None:
+            return SelectionTrace(chosen=tab.names[tab.fastest], fallback=True)
+        eligible = [tab.names[i]
+                    for i in self._eligible_indices(tab, base_idx, t_u, t_l)]
         return SelectionTrace(chosen=self._pick_from(store, eligible, rng),
-                              base=base, eligible=tuple(eligible))
+                              base=tab.names[base_idx],
+                              eligible=tuple(eligible))
 
 
 class RelatedRandom(_ExplorationSetPolicy):

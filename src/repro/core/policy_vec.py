@@ -1,0 +1,259 @@
+"""Vectorized policy engine: batched selection over a ProfileTable.
+
+All of ModiPick's request-time math (§3.3 stages 1–3) and the paper's
+baselines are batched over requests *and* over the model pool:
+
+- **stage 1** is a masked argmax over the (batch × pool) Eq. 2
+  eligibility matrix in accuracy order (first True per row = greedy base);
+- **stage 2** is a broadcast window-membership matrix around each row's
+  base model;
+- **stage 3** evaluates the Eq. 3–4 utilities for every (request, model)
+  pair at once and samples with the Gumbel-top-1 trick — argmax over
+  ``log p + Gumbel`` draws exactly from the normalized utility
+  distribution, so the batched path is distributionally identical to the
+  scalar ``rng.choice`` loop (and the probability *vectors* are equal to
+  the scalar ``ModiPick._probs`` output to float precision).
+
+Deterministic policies (static/dynamic greedy, related-accurate) are
+bit-identical to their scalar loops, including tie-breaking order.
+
+Backends
+--------
+``select_batch(..., backend=...)`` accepts:
+
+- ``"numpy"`` — the reference implementation, always available;
+- ``"jax"``   — ModiPick's stage-3 utilities + sampling run jitted, with
+  the fused eligibility-mask/utility/normalize step as a Pallas kernel
+  (``repro.kernels.policy_select``; interpret mode off-TPU);
+- ``"auto"``/``None`` — numpy below ``JAX_MIN_BATCH`` requests, jax at or
+  above it (only for ModiPick — everything else is pure masked
+  argmax/argmin, which numpy already does at memory bandwidth).
+
+``REPRO_POLICY_BACKEND`` (env) overrides the default for a whole run —
+set ``numpy`` to force the reference path, ``jax`` to force the kernel.
+"""
+from __future__ import annotations
+
+import os
+from typing import List, Optional, Sequence, Tuple, Union
+
+import numpy as np
+
+from repro.core.policy import (EPS, DynamicGreedy, ModiPick, Policy,
+                               PureRandom, RelatedAccurate, RelatedRandom,
+                               StaticGreedy)
+from repro.core.profiles import ProfileStore, ProfileTable
+
+# Batch size at which ModiPick's stage 3 moves to the jitted/Pallas path.
+JAX_MIN_BATCH = 4096
+
+
+def _as_table(store: Union[ProfileStore, ProfileTable]) -> ProfileTable:
+    return store if isinstance(store, ProfileTable) else store.table()
+
+
+def _resolve_backend(backend: Optional[str], n_batch: int) -> str:
+    backend = backend or os.environ.get("REPRO_POLICY_BACKEND") or "auto"
+    if backend == "auto":
+        # The Pallas kernel only pays off compiled: off-TPU it executes
+        # through the interpreter, which loses to numpy at every batch
+        # size (see BENCH_policy_throughput.json), so auto requires an
+        # actual TPU backend before engaging it.
+        if n_batch >= JAX_MIN_BATCH and _on_tpu():
+            return "jax"
+        return "numpy"
+    if backend not in ("numpy", "jax"):
+        raise ValueError(f"unknown policy backend {backend!r} "
+                         "(expected numpy, jax or auto)")
+    return backend
+
+
+def _on_tpu() -> bool:
+    try:
+        import jax
+        return jax.default_backend() == "tpu"
+    except Exception:  # pragma: no cover - jax is baked into the container
+        return False
+
+
+# ----------------------------------------------------------------------
+# stages 1–2: masked argmax + broadcast window membership (numpy)
+# ----------------------------------------------------------------------
+
+def modipick_masks(tab: ProfileTable, t_u: np.ndarray, t_l: np.ndarray
+                   ) -> Tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray]:
+    """Batched stages 1–2.
+
+    Returns ``(base, has_base, eligible, natural)`` where ``base[b]`` is
+    the stage-1 pick's pool index (undefined where ``~has_base``),
+    ``eligible`` is the (B, n) stage-2 membership matrix with the base
+    forced in, and ``natural`` is the same matrix *before* forcing (the
+    scalar path appends an out-of-window base at the end of its eligible
+    list, which matters for deterministic tie-breaking)."""
+    mu, sigma = tab.mu, tab.sigma
+    order = tab.acc_order
+    B = len(t_u)
+    # Eq. 2 eligibility over the pool in accuracy order; argmax finds the
+    # first True per row = most accurate feasible base.
+    mu_o, sig_o = mu[order], sigma[order]
+    elig1 = ((mu_o + sig_o)[None, :] < t_u[:, None]) \
+        & ((mu_o - sig_o)[None, :] < t_l[:, None])
+    has_base = elig1.any(axis=1)
+    base = order[elig1.argmax(axis=1)]
+    base[~has_base] = tab.fastest  # placeholder; masked by has_base
+
+    # stage 2: window [T_L - half, T_L + half] around each row's base.
+    half = np.abs(t_l - mu[base]) + sigma[base]
+    lo, hi = t_l - half, t_l + half
+    natural = (lo[:, None] <= mu[None, :]) & (mu[None, :] <= hi[:, None]) \
+        & ((mu + sigma)[None, :] < t_u[:, None])
+    eligible = natural.copy()
+    eligible[np.arange(B), base] = True  # base always eligible
+    eligible &= has_base[:, None]
+    return base, has_base, eligible, natural
+
+
+# ----------------------------------------------------------------------
+# stage 3: batched Eq. 3–4 utilities → per-request probability vectors
+# ----------------------------------------------------------------------
+
+def modipick_probs(tab: ProfileTable, t_u: np.ndarray, t_l: np.ndarray,
+                   eligible: np.ndarray, gamma: float) -> np.ndarray:
+    """(B, n) probability matrix over the pool; zero where ineligible.
+    Rows with no eligible models (fallback rows) come back all-zero."""
+    num = t_u[:, None] - (tab.mu + tab.sigma)[None, :]
+    den = np.maximum(np.abs(t_l[:, None] - tab.mu[None, :]), EPS)
+    u = np.maximum(tab.accuracy, EPS)[None, :] ** gamma * num / den
+    u = np.where(eligible, u, 0.0)
+    total = u.sum(axis=1)
+    counts = eligible.sum(axis=1)
+    # Scalar-path degenerate case: non-finite or non-positive mass →
+    # uniform over the eligible set.
+    bad = (~np.isfinite(total)) | (total <= 0)
+    safe = np.where(bad | (counts == 0), 1.0, total)
+    probs = np.where(bad[:, None],
+                     eligible / np.maximum(counts, 1)[:, None],
+                     u / safe[:, None])
+    return probs
+
+
+def gumbel_top1(probs: np.ndarray, rng: np.random.Generator) -> np.ndarray:
+    """Sample one index per row from each row's probability vector via
+    argmax(log p + Gumbel) — exact categorical sampling, one vectorized
+    draw for the whole batch."""
+    g = rng.gumbel(size=probs.shape)
+    with np.errstate(divide="ignore"):
+        logits = np.where(probs > 0, np.log(probs), -np.inf)
+    return np.argmax(logits + g, axis=1)
+
+
+# ----------------------------------------------------------------------
+# per-policy batched selection
+# ----------------------------------------------------------------------
+
+def _modipick_batch(policy: ModiPick, tab: ProfileTable,
+                    t_budgets: np.ndarray, rng: np.random.Generator,
+                    backend: str) -> np.ndarray:
+    t_u = t_budgets
+    t_l = t_u - policy.t_threshold
+    base, has_base, eligible, _ = modipick_masks(tab, t_u, t_l)
+    if backend == "jax":
+        from repro.kernels import policy_select
+        choice = policy_select.sample_batch(
+            tab.mu, tab.sigma, tab.accuracy, t_u, t_l, eligible,
+            gamma=policy.gamma,
+            seed=int(rng.integers(np.iinfo(np.int64).max)))
+        choice = np.asarray(choice)
+    else:
+        probs = modipick_probs(tab, t_u, t_l, eligible, policy.gamma)
+        choice = gumbel_top1(probs, rng)
+    return np.where(has_base, choice, tab.fastest)
+
+
+def _related_random_batch(policy: RelatedRandom, tab: ProfileTable,
+                          t_budgets: np.ndarray,
+                          rng: np.random.Generator) -> np.ndarray:
+    t_u = t_budgets
+    t_l = t_u - policy.t_threshold
+    base, has_base, eligible, _ = modipick_masks(tab, t_u, t_l)
+    g = rng.gumbel(size=eligible.shape)
+    choice = np.argmax(np.where(eligible, g, -np.inf), axis=1)
+    return np.where(has_base, choice, tab.fastest)
+
+
+def _related_accurate_batch(policy: RelatedAccurate, tab: ProfileTable,
+                            t_budgets: np.ndarray) -> np.ndarray:
+    t_u = t_budgets
+    t_l = t_u - policy.t_threshold
+    base, has_base, eligible, natural = modipick_masks(tab, t_u, t_l)
+    n = len(tab)
+    B = len(t_u)
+    # Scalar tie-break: max() keeps the *first* max of the eligible list,
+    # which is pool order — except an out-of-window base is appended last.
+    rank = np.broadcast_to(np.arange(n), (B, n)).copy()
+    forced = ~natural[np.arange(B), base]
+    rank[np.arange(B), base] = np.where(forced, n, base)
+    acc = np.where(eligible, tab.accuracy[None, :], -np.inf)
+    best = acc.max(axis=1)
+    cand = eligible & (acc == best[:, None])
+    choice = np.argmin(np.where(cand, rank, n + 1), axis=1)
+    return np.where(has_base, choice, tab.fastest)
+
+
+def _dynamic_greedy_batch(tab: ProfileTable,
+                          t_budgets: np.ndarray) -> np.ndarray:
+    order = tab.acc_order
+    elig = tab.mu[None, order] <= t_budgets[:, None]
+    has = elig.any(axis=1)
+    return np.where(has, order[elig.argmax(axis=1)], tab.fastest)
+
+
+def select_batch(policy: Policy, store: Union[ProfileStore, ProfileTable],
+                 t_budgets: Sequence[float], rng: np.random.Generator, *,
+                 backend: Optional[str] = None) -> List[str]:
+    """Batched ``policy.select`` over ``t_budgets`` → list of model names.
+
+    Deterministic policies return exactly what B scalar ``select`` calls
+    would; ModiPick/RelatedRandom sample from the identical per-request
+    distributions in one vectorized draw (so individual picks differ from
+    the sequential RNG stream, but their law does not).
+    """
+    tab = _as_table(store)
+    t = np.asarray(t_budgets, dtype=np.float64)
+    if t.ndim != 1:
+        raise ValueError("t_budgets must be one-dimensional")
+    backend = _resolve_backend(backend, len(t))
+
+    # Exact-type dispatch: a subclass may override any stage, so only
+    # the classes implemented here take the batched path — everything
+    # else falls back to the (always-correct) scalar loop.
+    kind = type(policy)
+    if kind is RelatedRandom:
+        idx = _related_random_batch(policy, tab, t, rng)
+    elif kind is RelatedAccurate:
+        idx = _related_accurate_batch(policy, tab, t)
+    elif kind is ModiPick:
+        idx = _modipick_batch(policy, tab, t, rng, backend)
+    elif kind is DynamicGreedy:
+        idx = _dynamic_greedy_batch(tab, t)
+    elif kind is StaticGreedy:
+        if isinstance(store, ProfileTable):
+            # No live store to freeze against: honour an existing frozen
+            # pick, else derive the dev-time choice from the snapshot
+            # (without thawing the policy's own state).
+            name = policy._frozen
+            if name is None or name not in tab.index:
+                name = policy.freeze_pick(tab)
+        else:
+            name = policy.select_traced(store, t[0] if len(t) else 0.0,
+                                        rng).chosen
+        idx = np.full(len(t), tab.index[name])
+    elif kind is PureRandom:
+        idx = rng.integers(len(tab), size=len(t))
+    else:
+        if isinstance(store, ProfileTable):
+            raise TypeError(f"no batched implementation for {policy!r} "
+                            "and a bare ProfileTable cannot drive the "
+                            "scalar path")
+        return [policy.select(store, float(b), rng) for b in t]
+    return [tab.names[int(i)] for i in idx]

@@ -10,7 +10,9 @@ from __future__ import annotations
 
 import math
 from dataclasses import dataclass, field
-from typing import Dict, Iterable, List, Optional
+from typing import Dict, Iterable, List, Optional, Tuple
+
+import numpy as np
 
 
 @dataclass
@@ -49,6 +51,59 @@ class ModelProfile:
         self.queue_obs += 1
 
 
+class ProfileTable:
+    """Structure-of-arrays snapshot of a :class:`ProfileStore`.
+
+    Selection math (``core.policy`` / ``core.policy_vec``) runs over
+    contiguous ``mu``/``sigma``/``accuracy``/``queue_mu`` arrays instead
+    of a dict of dataclasses, and the accuracy-descending order — which
+    every greedy stage needs — is computed once per snapshot instead of
+    re-sorted per call.  Array positions follow the store's insertion
+    order, so index ``i`` everywhere means "the i-th managed model".
+    """
+
+    __slots__ = ("names", "index", "accuracy", "mu", "sigma", "queue_mu",
+                 "acc_order", "fastest")
+
+    def __init__(self, names: Tuple[str, ...], accuracy: np.ndarray,
+                 mu: np.ndarray, sigma: np.ndarray, queue_mu: np.ndarray,
+                 acc_order: Optional[np.ndarray] = None):
+        self.names = tuple(names)
+        self.index: Dict[str, int] = {n: i for i, n in enumerate(self.names)}
+        self.accuracy = accuracy
+        self.mu = mu
+        self.sigma = sigma
+        self.queue_mu = queue_mu
+        # Stable sort ties on insertion order — matches
+        # ``sorted(profiles, key=lambda p: -p.accuracy)`` exactly.
+        self.acc_order = (np.argsort(-accuracy, kind="stable")
+                          if acc_order is None else acc_order)
+        self.fastest = int(np.argmin(mu))
+
+    @classmethod
+    def from_store(cls, store: "ProfileStore") -> "ProfileTable":
+        ps = list(store.profiles.values())
+        return cls(
+            names=tuple(p.name for p in ps),
+            accuracy=np.array([p.accuracy for p in ps], dtype=np.float64),
+            mu=np.array([p.mu for p in ps], dtype=np.float64),
+            sigma=np.array([p.sigma for p in ps], dtype=np.float64),
+            queue_mu=np.array([p.queue_mu for p in ps], dtype=np.float64),
+        )
+
+    def shifted(self, shifts: np.ndarray) -> "ProfileTable":
+        """Table with ``mu + shifts`` (the queue-aware view: waits folded
+        into the location of the latency distribution).  Accuracy — and
+        therefore the cached order — is unchanged; ``queue_mu`` is zeroed
+        because the shift has consumed it."""
+        return ProfileTable(self.names, self.accuracy, self.mu + shifts,
+                            self.sigma, np.zeros_like(self.queue_mu),
+                            acc_order=self.acc_order)
+
+    def __len__(self) -> int:
+        return len(self.names)
+
+
 class ProfileStore:
     """Pool of model profiles with ModiPick's maintenance rules."""
 
@@ -58,6 +113,11 @@ class ProfileStore:
         self.alpha = alpha
         self.cold_age = cold_age
         self.step = 0
+        self._table: Optional[ProfileTable] = None
+        # Identity root for derived views: ``sim.queueaware.shifted_store``
+        # points its per-selection views back at the store they shadow, so
+        # store-identity semantics (StaticGreedy's freeze) survive wrapping.
+        self.base: "ProfileStore" = self
 
     def names(self) -> List[str]:
         return list(self.profiles)
@@ -65,11 +125,25 @@ class ProfileStore:
     def __getitem__(self, name: str) -> ModelProfile:
         return self.profiles[name]
 
+    def table(self) -> ProfileTable:
+        """SoA snapshot, rebuilt lazily after ``observe``/``observe_queue``
+        (dirty flag) rather than re-derived per selection.  Callers that
+        mutate ``ModelProfile`` fields directly must call
+        :meth:`invalidate` themselves."""
+        if self._table is None:
+            self._table = ProfileTable.from_store(self)
+        return self._table
+
+    def invalidate(self) -> None:
+        self._table = None
+
     def observe(self, name: str, latency_ms: float) -> None:
         self.profiles[name].update(latency_ms, self.alpha)
+        self._table = None
 
     def observe_queue(self, name: str, wait_ms: float) -> None:
         self.profiles[name].update_queue(wait_ms, self.alpha)
+        self._table = None
 
     def queue_wait(self, name: str) -> float:
         """Estimated queue wait W_queue(m) from telemetry (0 until the

@@ -73,4 +73,5 @@ def make_store(entries: List[ZooEntry], *, alpha: float = 0.1,
             p.mu = e.mu_ms
             p.var = e.sigma_ms ** 2
             p.n_obs = 1000
+        store.invalidate()  # direct field writes bypass the dirty flag
     return store

@@ -1,0 +1,114 @@
+"""Batched ModiPick stage-3 Pallas TPU kernel + jitted Gumbel sampling.
+
+The hot step of the vectorized policy engine is the fused
+eligibility-mask / Eq. 3–4 utility / normalize pass over the
+(batch × pool) matrix.  The pool rides the 128-lane axis (padded), the
+batch is blocked on the sublane axis, and each grid step produces the
+per-request probability rows for its batch block in one VPU pass — no
+intermediate (B, n) utility matrix ever round-trips through HBM.
+
+``sample_batch`` wraps the kernel with the Gumbel-top-1 draw
+(``argmax(log p + Gumbel)`` samples exactly from ``p``) under one jit, so
+the whole stage 3 — utilities, normalization, sampling — runs compiled.
+Off-TPU the kernel executes in interpret mode, same as every other
+kernel in this package; ``kernels.ref.policy_probs_ref`` is the pure-jnp
+oracle and ``core.policy_vec.modipick_probs`` the float64 numpy
+reference.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+EPS = 1e-9
+LANES = 128
+
+
+def _probs_kernel(mu_ref, sig_ref, acc_ref, tu_ref, tl_ref, elig_ref,
+                  out_ref, *, gamma: float):
+    mu = mu_ref[...]          # (1, n)
+    sig = sig_ref[...]
+    acc = acc_ref[...]
+    tu = tu_ref[...]          # (bb, 1)
+    tl = tl_ref[...]
+    e = elig_ref[...]         # (bb, n) 0/1 mask
+
+    num = tu - (mu + sig)                      # broadcast → (bb, n)
+    den = jnp.maximum(jnp.abs(tl - mu), EPS)
+    u = jnp.power(jnp.maximum(acc, EPS), gamma) * num / den
+    u = jnp.where(e > 0, u, 0.0)
+    total = jnp.sum(u, axis=1, keepdims=True)
+    cnt = jnp.sum(e, axis=1, keepdims=True)
+    good = jnp.isfinite(total) & (total > 0)
+    uniform = e / jnp.maximum(cnt, 1.0)
+    out_ref[...] = jnp.where(good, u / jnp.where(good, total, 1.0), uniform)
+
+
+def modipick_probs(mu, sigma, acc, t_u, t_l, elig, *, gamma: float = 1.0,
+                   block_b: int = 256, interpret: bool = False):
+    """Fused stage-3 probability matrix.
+
+    mu/sigma/acc: (n,) pool arrays; t_u/t_l: (B,) per-request bounds;
+    elig: (B, n) stage-2 eligibility → (B, n) float32 probabilities
+    (rows with no eligible model come back all-zero).
+    """
+    B, n = elig.shape
+    npad = max(LANES, -(-n // LANES) * LANES)
+    bb = min(block_b, max(8, -(-B // 8) * 8))
+    bpad = -(-B // bb) * bb
+
+    f32 = jnp.float32
+    pool = lambda x: jnp.pad(jnp.asarray(x, f32), (0, npad - n))[None, :]
+    per_req = lambda x: jnp.pad(jnp.asarray(x, f32), (0, bpad - B))[:, None]
+    e = jnp.pad(jnp.asarray(elig, f32), ((0, bpad - B), (0, npad - n)))
+
+    out = pl.pallas_call(
+        functools.partial(_probs_kernel, gamma=gamma),
+        grid=(bpad // bb,),
+        in_specs=[
+            pl.BlockSpec((1, npad), lambda i: (0, 0)),
+            pl.BlockSpec((1, npad), lambda i: (0, 0)),
+            pl.BlockSpec((1, npad), lambda i: (0, 0)),
+            pl.BlockSpec((bb, 1), lambda i: (i, 0)),
+            pl.BlockSpec((bb, 1), lambda i: (i, 0)),
+            pl.BlockSpec((bb, npad), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((bb, npad), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bpad, npad), f32),
+        interpret=interpret,
+    )(pool(mu), pool(sigma), pool(acc), per_req(t_u), per_req(t_l), e)
+    return out[:B, :n]
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("gamma", "block_b", "interpret"))
+def _sample_jit(mu, sigma, acc, t_u, t_l, elig, key, *, gamma, block_b,
+                interpret):
+    probs = modipick_probs(mu, sigma, acc, t_u, t_l, elig, gamma=gamma,
+                           block_b=block_b, interpret=interpret)
+    g = jax.random.gumbel(key, probs.shape, dtype=probs.dtype)
+    logits = jnp.where(probs > 0, jnp.log(probs), -jnp.inf)
+    return jnp.argmax(logits + g, axis=1)
+
+
+def sample_batch(mu, sigma, acc, t_u, t_l, elig, *, gamma: float = 1.0,
+                 seed: int = 0, block_b: int = 256) -> np.ndarray:
+    """One Gumbel-top-1 pick per request from the kernel's probability
+    rows; returns (B,) pool indices as numpy.  Rows with no eligible
+    model return an arbitrary index — callers mask them with their
+    fallback (``policy_vec`` routes those to the fastest model)."""
+    interpret = jax.default_backend() != "tpu"
+    key = jax.random.PRNGKey(seed)
+    idx = _sample_jit(jnp.asarray(mu, jnp.float32),
+                      jnp.asarray(sigma, jnp.float32),
+                      jnp.asarray(acc, jnp.float32),
+                      jnp.asarray(t_u, jnp.float32),
+                      jnp.asarray(t_l, jnp.float32),
+                      jnp.asarray(elig, jnp.float32),
+                      key, gamma=gamma, block_b=block_b,
+                      interpret=interpret)
+    return np.asarray(idx)

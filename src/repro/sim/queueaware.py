@@ -41,7 +41,11 @@ def queue_aware_budget(t_sla: float, t_input: float, w_queue: float) -> float:
 def shifted_store(store: ProfileStore, w_queue_fn: WQueueFn) -> ProfileStore:
     """View of ``store`` with each model's mean shifted by its estimated
     queue wait.  Returns ``store`` itself when every shift is zero, so
-    the zero-load path is bit-identical to plain selection."""
+    the zero-load path is bit-identical to plain selection.
+
+    The view's ``ProfileTable`` is derived from the base store's cached
+    snapshot: a mu shift cannot change the accuracy order, so the view
+    reuses it instead of re-sorting the pool on every selection."""
     shifts: Dict[str, float] = {n: max(0.0, float(w_queue_fn(n)))
                                 for n in store.profiles}
     if not any(shifts.values()):
@@ -53,6 +57,10 @@ def shifted_store(store: ProfileStore, w_queue_fn: WQueueFn) -> ProfileStore:
          for p in store.profiles.values()],
         alpha=store.alpha, cold_age=store.cold_age)
     view.step = store.step
+    view.base = store.base
+    base = store.table()
+    view._table = base.shifted(
+        np.array([shifts[n] for n in base.names]))
     return view
 
 

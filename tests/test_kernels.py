@@ -88,6 +88,35 @@ def test_rglru_scan(dtype, B, S, W, block):
                                np.asarray(expect, np.float32), **tol(dtype))
 
 
+@pytest.mark.parametrize("B,n,gamma", [
+    (8, 11, 1.0),      # Table-2 pool, one batch block
+    (300, 12, 4.0),    # ragged batch (padding) + sharpened accuracy
+    (64, 200, 1.0),    # pool wider than one lane tile
+])
+def test_policy_select_probs(B, n, gamma):
+    """Fused ModiPick stage-3 kernel vs the pure-jnp oracle, including
+    all-ineligible (fallback) rows."""
+    rng = np.random.default_rng(42)
+    mu = jnp.asarray(rng.uniform(1.0, 200.0, n), jnp.float32)
+    sigma = jnp.asarray(rng.uniform(0.0, 20.0, n), jnp.float32)
+    acc = jnp.asarray(rng.uniform(0.05, 1.0, n), jnp.float32)
+    t_u = jnp.asarray(rng.uniform(5.0, 300.0, B), jnp.float32)
+    t_l = t_u - 20.0
+    elig = jnp.asarray(
+        (rng.random((B, n)) < 0.4)
+        & (np.asarray(mu + sigma)[None, :] < np.asarray(t_u)[:, None]))
+    elig = elig.at[0].set(False)  # guaranteed fallback row
+    out = ops.modipick_probs(mu, sigma, acc, t_u, t_l, elig, gamma=gamma)
+    expect = ref.policy_probs_ref(mu, sigma, acc, t_u, t_l, elig,
+                                  gamma=gamma)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
+                               rtol=2e-5, atol=2e-5)
+    rows = np.asarray(out).sum(axis=1)
+    active = np.asarray(elig).any(axis=1)
+    np.testing.assert_allclose(rows[active], 1.0, rtol=1e-5)
+    np.testing.assert_allclose(rows[~active], 0.0, atol=1e-7)
+
+
 def test_flash_vs_model_xla_path():
     """The model's chunked XLA attention and the Pallas kernel agree."""
     from repro.models.attention import attention_full
