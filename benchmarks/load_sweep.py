@@ -1,16 +1,21 @@
-"""Arrival-rate sweep: SLA attainment vs offered load, per policy — and
-the vectorized SLA-frontier sweep driven straight through
-``select_batch``.
+"""Arrival-rate sweep: SLA attainment vs offered load, per policy — the
+admission-policy axis (shed-vs-degrade frontier) — and the vectorized
+SLA-frontier sweep driven straight through ``select_batch``.
 
 Beyond-paper benchmark on the discrete-event serving simulator
 (``repro.sim``): open-loop Poisson traffic over the paper's Table-2 zoo
 with one endpoint per model, swept across arrival rates.  Queue-blind
 policies (the paper's, unchanged) collapse once their favourite
 endpoints saturate; queue-aware ModiPick folds W_queue(m) into the
-budget and trades accuracy for attainment instead.
+budget and trades accuracy for attainment instead.  The admission axis
+sweeps queue-aware ModiPick under three shedding regimes — none,
+substrate depth-cap, and router-side SLA-aware — recording the
+shed-vs-degrade frontier (how much traffic each mode drops vs how much
+accuracy/attainment the survivors keep).
 
 Rows: ``load_sweep/<policy>/rate_<rps>`` with attainment, accuracy,
 p99 end-to-end latency, mean queue wait, and rejections;
+``load_sweep/admission_<mode>/rate_<rps>`` for the admission axis;
 ``sla_frontier/<policy>/sla_<ms>`` for the batched frontier.
 """
 from __future__ import annotations
@@ -21,6 +26,9 @@ SLA_MS = 250.0
 RATES_RPS = (2.0, 5.0, 10.0, 20.0, 40.0, 80.0)
 N_REQUESTS = 1500
 SEED = 7
+
+ADMISSION_RATES = (10.0, 20.0, 40.0, 80.0)
+ADMISSION_DEPTH_CAP = 3
 
 FRONTIER_SLAS = (100.0, 150.0, 250.0, 400.0)
 FRONTIER_BATCH = 50_000
@@ -61,6 +69,46 @@ def sweep_rows(rates=RATES_RPS, t_sla: float = SLA_MS,
                 f"attain={r.sla_attainment:.3f};acc={r.mean_accuracy:.3f};"
                 f"p99_ms={r.p99_latency:.1f};qwait_ms={r.mean_queue_wait:.1f};"
                 f"rejected={r.n_rejected}"))
+    return rows
+
+
+def admission_rows(rates=ADMISSION_RATES, t_sla: float = SLA_MS,
+                   n_requests: int = N_REQUESTS, seed: int = SEED
+                   ) -> List[Tuple[str, float, str]]:
+    """Shed-vs-degrade frontier: queue-aware ModiPick under three
+    admission regimes.  ``none`` degrades only (serves everything,
+    eats the queueing delay), ``depth_cap`` sheds on substrate
+    back-pressure after selection, ``sla_aware`` sheds router-side
+    before selection whenever no model can meet the remaining budget."""
+    from repro.core.netmodel import NetworkModel
+    from repro.core.policy import ModiPick
+    from repro.core.zoo import TABLE2
+    from repro.router import SlaAwareAdmission
+    from repro.sim.arrivals import PoissonArrivals
+    from repro.sim.engine import ServingSimulator
+    from repro.sim.replica import per_model_replicas
+
+    net = NetworkModel(50.0, 25.0)
+    modes = [
+        ("none", None, None),
+        ("depth_cap", ADMISSION_DEPTH_CAP, None),
+        ("sla_aware", None, SlaAwareAdmission()),
+    ]
+    rows = []
+    for mode, cap, admission in modes:
+        for rate in rates:
+            sim = ServingSimulator(
+                TABLE2, net, per_model_replicas(TABLE2, max_queue_depth=cap),
+                seed=seed, queue_aware=True, admission=admission)
+            r = sim.run(ModiPick(t_threshold=20.0), t_sla, n_requests,
+                        arrivals=PoissonArrivals(rate))
+            rows.append((
+                f"load_sweep/admission_{mode}/rate_{rate:g}",
+                r.mean_latency * 1e3,
+                f"attain={r.sla_attainment:.3f};acc={r.mean_accuracy:.3f};"
+                f"shed={r.n_rejected / max(r.n_arrived, 1):.3f};"
+                f"p99_ms={r.p99_latency:.1f};"
+                f"qwait_ms={r.mean_queue_wait:.1f}"))
     return rows
 
 
@@ -108,5 +156,5 @@ def frontier_rows(slas=FRONTIER_SLAS, n: int = FRONTIER_BATCH,
 
 if __name__ == "__main__":
     print("name,us_per_call,derived")
-    for row in sweep_rows() + frontier_rows():
+    for row in sweep_rows() + admission_rows() + frontier_rows():
         print(f"{row[0]},{row[1]:.3f},{row[2]}")

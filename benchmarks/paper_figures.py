@@ -38,27 +38,27 @@ def fig3_latency_table() -> List[Row]:
     return rows
 
 
-def fig5_prototype() -> List[Row]:
+def fig5_prototype(n: int = N) -> List[Row]:
     """Fig. 5: end-to-end prototype (2-model pool, MotoX + campus WiFi)."""
     sim = Simulator(entries=PROTOTYPE_POOL, network=prototype_wifi(), seed=11)
     rows = []
     for sla in (75, 100, 115, 150, 200, 300, 400):
-        r, us = _timed(lambda: sim.run(ModiPick(t_threshold=20.0), sla, N))
-        rows.append((f"fig5/sla_{sla}", us / N,
+        r, us = _timed(lambda: sim.run(ModiPick(t_threshold=20.0), sla, n))
+        rows.append((f"fig5/sla_{sla}", us / n,
                      f"violations={1-r.sla_attainment:.3f};accuracy={r.mean_accuracy:.3f}"))
     return rows
 
 
-def fig6_vs_static_greedy() -> List[Row]:
+def fig6_vs_static_greedy(n: int = N) -> List[Row]:
     """Fig. 6a/6b: ModiPick vs static greedy, 11-model zoo, campus WiFi."""
     sim = Simulator(entries=TABLE2, network=campus_wifi(), seed=12)
     rows = []
     for sla in (100, 115, 150, 200, 250, 300):
-        mp, us = _timed(lambda: sim.run(ModiPick(t_threshold=20.0), sla, N))
-        sg = sim.run(StaticGreedy(sla), sla, N)
-        dg = sim.run(DynamicGreedy(), sla, N)
+        mp, us = _timed(lambda: sim.run(ModiPick(t_threshold=20.0), sla, n))
+        sg = sim.run(StaticGreedy(sla), sla, n)
+        dg = sim.run(DynamicGreedy(), sla, n)
         lat_red = 1.0 - mp.mean_latency / sg.mean_latency
-        rows.append((f"fig6/sla_{sla}", us / N,
+        rows.append((f"fig6/sla_{sla}", us / n,
                      f"mp_attain={mp.sla_attainment:.3f};sg_attain={sg.sla_attainment:.3f};"
                      f"dg_attain={dg.sla_attainment:.3f};mp_acc={mp.mean_accuracy:.3f};"
                      f"sg_acc={sg.mean_accuracy:.3f};latency_reduction={lat_red:.3f}"))
@@ -68,27 +68,27 @@ def fig6_vs_static_greedy() -> List[Row]:
     return rows
 
 
-def fig7_cv_sweep() -> List[Row]:
+def fig7_cv_sweep(n: int = N) -> List[Row]:
     """Fig. 7: accuracy + attainment vs network CV at SLA 100/250ms."""
     rows = []
     for sla in (100, 250):
         for cv in (0.0, 0.25, 0.5, 0.74, 1.0):
             sim = Simulator(entries=TABLE2,
                             network=NetworkModel.from_cv(50.0, cv), seed=13)
-            r, us = _timed(lambda: sim.run(ModiPick(t_threshold=20.0), sla, N))
-            rows.append((f"fig7/sla_{sla}_cv_{int(cv*100)}", us / N,
+            r, us = _timed(lambda: sim.run(ModiPick(t_threshold=20.0), sla, n))
+            rows.append((f"fig7/sla_{sla}_cv_{int(cv*100)}", us / n,
                          f"attain={r.sla_attainment:.3f};acc={r.mean_accuracy:.3f}"))
     return rows
 
 
-def fig8_usage_vs_cv() -> List[Row]:
+def fig8_usage_vs_cv(n: int = N) -> List[Row]:
     """Fig. 8: model usage mix vs CV at SLA 100/250ms."""
     rows = []
     for sla in (100, 250):
         for cv in (0.0, 0.5, 1.0):
             sim = Simulator(entries=TABLE2,
                             network=NetworkModel.from_cv(50.0, cv), seed=14)
-            r = sim.run(ModiPick(t_threshold=20.0), sla, N)
+            r = sim.run(ModiPick(t_threshold=20.0), sla, n)
             n_used = sum(1 for v in r.model_usage.values() if v > 0.01)
             top = sorted(r.model_usage.items(), key=lambda kv: -kv[1])[:2]
             rows.append((f"fig8/sla_{sla}_cv_{int(cv*100)}", 0.0,
@@ -97,7 +97,7 @@ def fig8_usage_vs_cv() -> List[Row]:
     return rows
 
 
-def fig9_decomposition() -> List[Row]:
+def fig9_decomposition(n: int = N) -> List[Row]:
     """Fig. 9: stage decomposition with the adversarial NasNet-Fictional.
 
     Reproduction note: `modipick_eq3` is Eq. 3 exactly as printed (γ=1) —
@@ -115,23 +115,23 @@ def fig9_decomposition() -> List[Row]:
                          (lambda: PureRandom(), "pure_random"),
                          (lambda: RelatedRandom(20.0), "related_random"),
                          (lambda: RelatedAccurate(20.0), "related_accurate")]:
-            r, us = _timed(lambda: sim.run(mk(), sla, N))
-            rows.append((f"fig9/sla_{sla}_{name}", us / N,
+            r, us = _timed(lambda: sim.run(mk(), sla, n))
+            rows.append((f"fig9/sla_{sla}_{name}", us / n,
                          f"attain={r.sla_attainment:.3f};acc={r.mean_accuracy:.3f};"
                          f"fictional={r.model_usage.get('NasNet-Fictional', 0.0):.3f}"))
     return rows
 
 
-def threshold_ablation() -> List[Row]:
+def threshold_ablation(n: int = N) -> List[Row]:
     """§3.3: T_threshold ∈ [0, T_D] trades exploration width for safety.
     T_threshold=0 collapses ModiPick toward dynamic greedy; larger values
     widen M_E (more exploration, slightly earlier fallbacks)."""
     sim = Simulator(entries=TABLE2, network=campus_wifi(), seed=16)
     rows = []
     for thr in (0.0, 5.0, 20.0, 50.0, 100.0, 150.0):
-        r, us = _timed(lambda: sim.run(ModiPick(t_threshold=thr), 250.0, N))
+        r, us = _timed(lambda: sim.run(ModiPick(t_threshold=thr), 250.0, n))
         n_used = sum(1 for v in r.model_usage.values() if v > 0.01)
-        rows.append((f"threshold/thr_{int(thr)}", us / N,
+        rows.append((f"threshold/thr_{int(thr)}", us / n,
                      f"attain={r.sla_attainment:.3f};acc={r.mean_accuracy:.3f};"
                      f"n_models={n_used}"))
     return rows

@@ -30,9 +30,10 @@ def roofline_rows(mesh: str = "single") -> List[Row]:
     return rows
 
 
-def kernel_micro() -> List[Row]:
+def kernel_micro(seq_len: int = 512) -> List[Row]:
     """Interpret-mode kernel micro-bench (CPU): correctness-path timing +
-    analytic TPU roofline estimate per kernel."""
+    analytic TPU roofline estimate per kernel.  ``seq_len`` scales the
+    problem down for the --smoke harness."""
     import jax
     import jax.numpy as jnp
     from repro.distributed.hlo import HBM_BW, PEAK_FLOPS_BF16
@@ -40,17 +41,18 @@ def kernel_micro() -> List[Row]:
 
     rows = []
     ks = jax.random.split(jax.random.PRNGKey(0), 3)
-    B, H, KV, S, hd = 1, 4, 2, 512, 64
+    B, H, KV, S, hd = 1, 4, 2, seq_len, 64
+    blk = min(128, seq_len)
     q = jax.random.normal(ks[0], (B, H, S, hd), jnp.float32)
     k = jax.random.normal(ks[1], (B, KV, S, hd), jnp.float32)
     v = jax.random.normal(ks[2], (B, KV, S, hd), jnp.float32)
-    out = ops.flash_attention(q, k, v, block_q=128, block_k=128)
+    out = ops.flash_attention(q, k, v, block_q=blk, block_k=blk)
     out.block_until_ready()
     t0 = time.perf_counter()
-    ops.flash_attention(q, k, v, block_q=128, block_k=128).block_until_ready()
+    ops.flash_attention(q, k, v, block_q=blk, block_k=blk).block_until_ready()
     us = (time.perf_counter() - t0) * 1e6
     flops = 4 * B * H * S * S * hd * 0.5  # causal
     tpu_est_us = flops / PEAK_FLOPS_BF16 * 1e6
-    rows.append(("kernel/flash_attention_512", us,
+    rows.append((f"kernel/flash_attention_{S}", us,
                  f"flops={flops:.3g};tpu_roofline_us={tpu_est_us:.2f}"))
     return rows

@@ -12,36 +12,59 @@ def main() -> None:
     ap.add_argument("--fast", action="store_true",
                     help="skip the live-pool serving benchmark and cap "
                          "policy_throughput at small batches")
+    ap.add_argument("--smoke", action="store_true",
+                    help="run every registered benchmark at toy scale "
+                         "(implies --fast): the CI bit-rot guard — a "
+                         "benchmark that stopped importing or running "
+                         "fails here instead of at sweep time")
     ap.add_argument("--fail-fast", action="store_true",
                     help="abort on the first failing benchmark")
     ap.add_argument("--json", action="store_true",
                     help="also write BENCH_<name>.json per benchmark "
                          "(perf trajectory record)")
     args = ap.parse_args()
+    if args.smoke:
+        args.fast = True
 
     from benchmarks import load_sweep as ls
     from benchmarks import paper_figures as pf
     from benchmarks import policy_throughput as pt
     from benchmarks import roofline as rl
 
+    # Toy-scale knobs used under --smoke; full scale otherwise.
+    fig_kw = {"n": 60} if args.smoke else {}
+
+    def smoke_load_sweep():
+        return (ls.sweep_rows(rates=(5.0, 40.0), n_requests=120)
+                + ls.admission_rows(rates=(40.0,), n_requests=120))
+
     benches = {
         "table2": pf.table2_zoo,
         "fig3": pf.fig3_latency_table,
-        "fig5": pf.fig5_prototype,
-        "fig6": pf.fig6_vs_static_greedy,
-        "fig7": pf.fig7_cv_sweep,
-        "fig8": pf.fig8_usage_vs_cv,
-        "fig9": pf.fig9_decomposition,
-        "threshold": pf.threshold_ablation,
+        "fig5": lambda: pf.fig5_prototype(**fig_kw),
+        "fig6": lambda: pf.fig6_vs_static_greedy(**fig_kw),
+        "fig7": lambda: pf.fig7_cv_sweep(**fig_kw),
+        "fig8": lambda: pf.fig8_usage_vs_cv(**fig_kw),
+        "fig9": lambda: pf.fig9_decomposition(**fig_kw),
+        "threshold": lambda: pf.threshold_ablation(**fig_kw),
         "roofline_single": lambda: rl.roofline_rows("single"),
         "roofline_multi": lambda: rl.roofline_rows("multi"),
-        "kernels": rl.kernel_micro,
-        "tpu_pool": _tpu_pool,
-        "load_sweep": ls.sweep_rows,
-        "sla_frontier": ls.frontier_rows,
+        "kernels": lambda: rl.kernel_micro(
+            seq_len=128 if args.smoke else 512),
+        "tpu_pool": (lambda: _tpu_pool(n=120, slas=(100, 600)))
+        if args.smoke else _tpu_pool,
+        "load_sweep": smoke_load_sweep if args.smoke else
+        (lambda: ls.sweep_rows() + ls.admission_rows()),
+        "sla_frontier": (lambda: ls.frontier_rows(slas=(250.0,), n=2048))
+        if args.smoke else ls.frontier_rows,
         "policy_throughput": lambda: pt.bench_rows(fast=args.fast),
     }
-    if not args.fast:
+    if args.smoke:
+        # Toy pool (2 reduced-width variants, short cache, 6 requests):
+        # the real-JAX serving path stays under the bit-rot guard too.
+        benches["live_pool"] = lambda: _live_pool(
+            widths=(0.5, 1.0), cache_len=32, n=6, tokens_shape=(1, 16))
+    elif not args.fast:
         benches["live_pool"] = _live_pool
 
     selected = args.only.split(",") if args.only else list(benches)
@@ -57,7 +80,10 @@ def main() -> None:
             for row in rows:
                 print(f"{row[0]},{row[1]:.3f},{row[2]}")
             if args.json:
-                with open(f"BENCH_{name}.json", "w") as fh:
+                # Toy-scale rows must not clobber the tracked full-scale
+                # perf-trajectory records.
+                suffix = "_smoke" if args.smoke else ""
+                with open(f"BENCH_{name}{suffix}.json", "w") as fh:
                     json.dump({"benchmark": name,
                                "rows": [{"name": r[0], "us_per_call": r[1],
                                          "derived": r[2]} for r in rows]},
@@ -72,7 +98,7 @@ def main() -> None:
         raise SystemExit(1)
 
 
-def _tpu_pool():
+def _tpu_pool(n: int = 2000, slas=(100, 300, 600, 1500, 3000)):
     """Beyond-paper: ModiPick over (arch × mesh) TPU pool members whose
     latency profiles come from the dry-run rooflines (core/tpu_pool.py)."""
     import os
@@ -90,9 +116,9 @@ def _tpu_pool():
     zoo = to_zoo(pool)
     sim = Simulator(entries=zoo, network=NetworkModel(20.0, 10.0), seed=20)
     rows = []
-    for sla in (100, 300, 600, 1500, 3000):
-        mp = sim.run(ModiPick(t_threshold=50.0, gamma=4.0), sla, 2000)
-        sg = sim.run(StaticGreedy(sla), sla, 2000)
+    for sla in slas:
+        mp = sim.run(ModiPick(t_threshold=50.0, gamma=4.0), sla, n)
+        sg = sim.run(StaticGreedy(sla), sla, n)
         top = max(mp.model_usage, key=mp.model_usage.get)
         rows.append((f"tpu_pool/sla_{sla}", 0.0,
                      f"mp_attain={mp.sla_attainment:.3f};mp_q={mp.mean_accuracy:.3f};"
@@ -101,7 +127,8 @@ def _tpu_pool():
     return rows
 
 
-def _live_pool():
+def _live_pool(widths=(0.5, 1.0, 2.0), cache_len=160, n=60,
+               tokens_shape=(4, 128)):
     """Live serving e2e: real JAX pool behind ModiPick vs static greedy."""
     import numpy as np
     from repro.configs.registry import get_config
@@ -111,15 +138,16 @@ def _live_pool():
     from repro.serving.pool import scaled_family
 
     rows = []
-    variants = scaled_family(get_config("qwen2-1.5b"), widths=(0.5, 1.0, 2.0),
-                             cache_len=160)
-    tokens = np.random.default_rng(0).integers(0, 500, (4, 128), dtype=np.int32)
+    variants = scaled_family(get_config("qwen2-1.5b"), widths=widths,
+                             cache_len=cache_len)
+    tokens = np.random.default_rng(0).integers(0, 500, tokens_shape,
+                                               dtype=np.int32)
     net = NetworkModel(mean_ms=20.0, std_ms=10.0)
     for name, pol in [("modipick", ModiPick(t_threshold=25.0)),
                       ("static_greedy", StaticGreedy(120.0))]:
         ex = PoolExecutor(variants, net, pol, seed=3)
         ex.warm_up(tokens)
-        for _ in range(60):
+        for _ in range(n):
             ex.execute(tokens, t_sla=120.0)
         s = ex.summary()
         rows.append((f"live_pool/{name}", s["mean_latency_ms"] * 1e3,

@@ -41,11 +41,13 @@ import numpy as np
 
 from repro.core.policy import (EPS, DynamicGreedy, ModiPick, Policy,
                                PureRandom, RelatedAccurate, RelatedRandom,
-                               StaticGreedy)
+                               SelectionTrace, StaticGreedy)
 from repro.core.profiles import ProfileStore, ProfileTable
 
 # Batch size at which ModiPick's stage 3 moves to the jitted/Pallas path.
 JAX_MIN_BATCH = 4096
+
+VALID_BACKENDS = ("auto", "numpy", "jax")
 
 
 def _as_table(store: Union[ProfileStore, ProfileTable]) -> ProfileTable:
@@ -53,7 +55,16 @@ def _as_table(store: Union[ProfileStore, ProfileTable]) -> ProfileTable:
 
 
 def _resolve_backend(backend: Optional[str], n_batch: int) -> str:
-    backend = backend or os.environ.get("REPRO_POLICY_BACKEND") or "auto"
+    if backend is None:
+        env = os.environ.get("REPRO_POLICY_BACKEND")
+        if env and env not in VALID_BACKENDS:
+            raise ValueError(
+                f"REPRO_POLICY_BACKEND={env!r} is not a recognised policy "
+                f"backend; valid values: {', '.join(VALID_BACKENDS)}")
+        backend = env or "auto"
+    elif backend not in VALID_BACKENDS:
+        raise ValueError(f"unknown policy backend {backend!r}; "
+                         f"valid values: {', '.join(VALID_BACKENDS)}")
     if backend == "auto":
         # The Pallas kernel only pays off compiled: off-TPU it executes
         # through the interpreter, which loses to numpy at every batch
@@ -62,9 +73,6 @@ def _resolve_backend(backend: Optional[str], n_batch: int) -> str:
         if n_batch >= JAX_MIN_BATCH and _on_tpu():
             return "jax"
         return "numpy"
-    if backend not in ("numpy", "jax"):
-        raise ValueError(f"unknown policy backend {backend!r} "
-                         "(expected numpy, jax or auto)")
     return backend
 
 
@@ -153,10 +161,14 @@ def gumbel_top1(probs: np.ndarray, rng: np.random.Generator) -> np.ndarray:
 
 def _modipick_batch(policy: ModiPick, tab: ProfileTable,
                     t_budgets: np.ndarray, rng: np.random.Generator,
-                    backend: str) -> np.ndarray:
+                    backend: str):
+    """Returns ``(idx, has_base, base, eligible, probs)``; ``probs`` is
+    None on the jax backend (the kernel samples without materialising
+    the probability matrix host-side)."""
     t_u = t_budgets
     t_l = t_u - policy.t_threshold
     base, has_base, eligible, _ = modipick_masks(tab, t_u, t_l)
+    probs = None
     if backend == "jax":
         from repro.kernels import policy_select
         choice = policy_select.sample_batch(
@@ -167,22 +179,23 @@ def _modipick_batch(policy: ModiPick, tab: ProfileTable,
     else:
         probs = modipick_probs(tab, t_u, t_l, eligible, policy.gamma)
         choice = gumbel_top1(probs, rng)
-    return np.where(has_base, choice, tab.fastest)
+    return np.where(has_base, choice, tab.fastest), has_base, base, \
+        eligible, probs
 
 
 def _related_random_batch(policy: RelatedRandom, tab: ProfileTable,
                           t_budgets: np.ndarray,
-                          rng: np.random.Generator) -> np.ndarray:
+                          rng: np.random.Generator):
     t_u = t_budgets
     t_l = t_u - policy.t_threshold
     base, has_base, eligible, _ = modipick_masks(tab, t_u, t_l)
     g = rng.gumbel(size=eligible.shape)
     choice = np.argmax(np.where(eligible, g, -np.inf), axis=1)
-    return np.where(has_base, choice, tab.fastest)
+    return np.where(has_base, choice, tab.fastest), has_base, base, eligible
 
 
 def _related_accurate_batch(policy: RelatedAccurate, tab: ProfileTable,
-                            t_budgets: np.ndarray) -> np.ndarray:
+                            t_budgets: np.ndarray):
     t_u = t_budgets
     t_l = t_u - policy.t_threshold
     base, has_base, eligible, natural = modipick_masks(tab, t_u, t_l)
@@ -197,15 +210,14 @@ def _related_accurate_batch(policy: RelatedAccurate, tab: ProfileTable,
     best = acc.max(axis=1)
     cand = eligible & (acc == best[:, None])
     choice = np.argmin(np.where(cand, rank, n + 1), axis=1)
-    return np.where(has_base, choice, tab.fastest)
+    return np.where(has_base, choice, tab.fastest), has_base, base, eligible
 
 
-def _dynamic_greedy_batch(tab: ProfileTable,
-                          t_budgets: np.ndarray) -> np.ndarray:
+def _dynamic_greedy_batch(tab: ProfileTable, t_budgets: np.ndarray):
     order = tab.acc_order
     elig = tab.mu[None, order] <= t_budgets[:, None]
     has = elig.any(axis=1)
-    return np.where(has, order[elig.argmax(axis=1)], tab.fastest)
+    return np.where(has, order[elig.argmax(axis=1)], tab.fastest), has
 
 
 def select_batch(policy: Policy, store: Union[ProfileStore, ProfileTable],
@@ -229,25 +241,16 @@ def select_batch(policy: Policy, store: Union[ProfileStore, ProfileTable],
     # else falls back to the (always-correct) scalar loop.
     kind = type(policy)
     if kind is RelatedRandom:
-        idx = _related_random_batch(policy, tab, t, rng)
+        idx = _related_random_batch(policy, tab, t, rng)[0]
     elif kind is RelatedAccurate:
-        idx = _related_accurate_batch(policy, tab, t)
+        idx = _related_accurate_batch(policy, tab, t)[0]
     elif kind is ModiPick:
-        idx = _modipick_batch(policy, tab, t, rng, backend)
+        idx = _modipick_batch(policy, tab, t, rng, backend)[0]
     elif kind is DynamicGreedy:
-        idx = _dynamic_greedy_batch(tab, t)
+        idx = _dynamic_greedy_batch(tab, t)[0]
     elif kind is StaticGreedy:
-        if isinstance(store, ProfileTable):
-            # No live store to freeze against: honour an existing frozen
-            # pick, else derive the dev-time choice from the snapshot
-            # (without thawing the policy's own state).
-            name = policy._frozen
-            if name is None or name not in tab.index:
-                name = policy.freeze_pick(tab)
-        else:
-            name = policy.select_traced(store, t[0] if len(t) else 0.0,
-                                        rng).chosen
-        idx = np.full(len(t), tab.index[name])
+        idx = np.full(len(t), tab.index[_static_greedy_pick(
+            policy, store, tab, t, rng)])
     elif kind is PureRandom:
         idx = rng.integers(len(tab), size=len(t))
     else:
@@ -257,3 +260,100 @@ def select_batch(policy: Policy, store: Union[ProfileStore, ProfileTable],
                             "scalar path")
         return [policy.select(store, float(b), rng) for b in t]
     return [tab.names[int(i)] for i in idx]
+
+
+def _static_greedy_pick(policy: StaticGreedy,
+                        store: Union[ProfileStore, ProfileTable],
+                        tab: ProfileTable, t: np.ndarray,
+                        rng: np.random.Generator) -> str:
+    if isinstance(store, ProfileTable):
+        # No live store to freeze against: honour an existing frozen
+        # pick, else derive the dev-time choice from the snapshot
+        # (without thawing the policy's own state).
+        name = policy._frozen
+        if name is None or name not in tab.index:
+            name = policy.freeze_pick(tab)
+        return name
+    return policy.select_traced(store, t[0] if len(t) else 0.0, rng).chosen
+
+
+def _exploration_traces(tab: ProfileTable, idx, has_base, base, eligible,
+                        probs, detail: bool) -> List[SelectionTrace]:
+    """Assemble per-request traces from the batched stage outputs.
+    Eligible sets (and their probability vectors) are reported in pool
+    order — the scalar path appends an out-of-window base at the *end*
+    of its list instead, but the set and per-model probabilities are
+    identical.  ``detail=False`` skips the per-request eligible/probs
+    tuple materialization (chosen + fallback only) — the hot-path mode
+    for callers that don't consume the stage decomposition."""
+    fastest = tab.names[tab.fastest]
+    if not detail:
+        return [SelectionTrace(chosen=tab.names[int(i)], fallback=not h)
+                for i, h in zip(idx, has_base)]
+    traces = []
+    for b in range(len(idx)):
+        if not has_base[b]:
+            traces.append(SelectionTrace(chosen=fastest, fallback=True))
+            continue
+        members = np.flatnonzero(eligible[b])
+        traces.append(SelectionTrace(
+            chosen=tab.names[int(idx[b])],
+            base=tab.names[int(base[b])],
+            eligible=tuple(tab.names[int(i)] for i in members),
+            probs=(tuple(float(p) for p in probs[b, members])
+                   if probs is not None else ())))
+    return traces
+
+
+def select_batch_traced(policy: Policy,
+                        store: Union[ProfileStore, ProfileTable],
+                        t_budgets: Sequence[float],
+                        rng: np.random.Generator, *,
+                        backend: Optional[str] = None,
+                        detail: bool = True) -> List[SelectionTrace]:
+    """Batched ``policy.select_traced``: one :class:`SelectionTrace` per
+    budget, produced by the same batched stages as :func:`select_batch`
+    (identical picks for identical ``rng`` state).  ModiPick-family
+    traces carry base/eligible/probs (probs only on the numpy backend);
+    greedy traces carry the fallback flag.  ``detail=False`` returns
+    chosen + fallback only — same picks, no per-request stage-tuple
+    materialization (the event-loop hot path).
+    """
+    tab = _as_table(store)
+    t = np.asarray(t_budgets, dtype=np.float64)
+    if t.ndim != 1:
+        raise ValueError("t_budgets must be one-dimensional")
+    if not len(t):
+        return []
+    backend = _resolve_backend(backend, len(t))
+
+    kind = type(policy)
+    if kind is ModiPick:
+        idx, has_base, base, eligible, probs = _modipick_batch(
+            policy, tab, t, rng, backend)
+        return _exploration_traces(tab, idx, has_base, base, eligible,
+                                   probs, detail)
+    if kind is RelatedRandom:
+        idx, has_base, base, eligible = _related_random_batch(
+            policy, tab, t, rng)
+        return _exploration_traces(tab, idx, has_base, base, eligible,
+                                   None, detail)
+    if kind is RelatedAccurate:
+        idx, has_base, base, eligible = _related_accurate_batch(
+            policy, tab, t)
+        return _exploration_traces(tab, idx, has_base, base, eligible,
+                                   None, detail)
+    if kind is DynamicGreedy:
+        idx, has = _dynamic_greedy_batch(tab, t)
+        return [SelectionTrace(chosen=tab.names[int(i)], fallback=not h)
+                for i, h in zip(idx, has)]
+    if kind is StaticGreedy:
+        name = _static_greedy_pick(policy, store, tab, t, rng)
+        return [SelectionTrace(chosen=name) for _ in t]
+    if kind is PureRandom:
+        picks = rng.integers(len(tab), size=len(t))
+        return [SelectionTrace(chosen=tab.names[int(i)]) for i in picks]
+    if isinstance(store, ProfileTable):
+        raise TypeError(f"no batched implementation for {policy!r} and a "
+                        "bare ProfileTable cannot drive the scalar path")
+    return [policy.select_traced(store, float(b), rng) for b in t]

@@ -1,12 +1,15 @@
 """Closed-loop ModiPick simulator (reproduces the paper's §4 experiments).
 
-This is now a thin wrapper over the discrete-event engine in
-``repro.sim``: the paper's loop is exactly ``ClosedLoopArrivals`` over a
-single shared replica, and the engine replays it draw-for-draw — same
-RNG, same order (uplink sample → selection → true latency → EWMA
-feedback → cold-model probe), so seeded results are unchanged by the
-refactor.  Open-loop traffic, FIFO queues, heterogeneous replicas and
-queue-aware selection live in ``repro.sim.engine.ServingSimulator``.
+This is now a thin closed-loop driver over the unified
+``repro.router.Router``: the paper's loop is exactly
+``ClosedLoopArrivals`` over a single shared replica, routed through the
+same Router object as the discrete-event engine and the live executor,
+and the engine replays it draw-for-draw — same RNG, same order (uplink
+sample → selection → true latency → EWMA feedback → cold-model probe),
+so seeded results are unchanged by the refactor.  Open-loop traffic,
+FIFO queues, heterogeneous replicas, queue-aware selection and admission
+control live in ``repro.sim.engine.ServingSimulator``; an ``admission``
+controller set here is passed straight through to the Router.
 """
 from __future__ import annotations
 
@@ -17,6 +20,7 @@ from repro.core.netmodel import NetworkModel
 from repro.core.policy import Policy
 from repro.core.profiles import ProfileStore
 from repro.core.zoo import ZooEntry
+from repro.router.admission import AdmissionController
 
 
 @dataclass
@@ -47,6 +51,9 @@ class Simulator:
     # models the co-tenant interference the paper motivates exploration with
     spike_prob: float = 0.0
     spike_mult: float = 10.0
+    # pluggable router-side admission (repro.router.admission); None is
+    # AdmitAll — the paper's closed loop never sheds.
+    admission: Optional[AdmissionController] = None
 
     def _engine(self):
         from repro.sim.engine import ServingSimulator
@@ -55,15 +62,18 @@ class Simulator:
             entries=list(self.entries), network=self.network,
             replicas=shared_replicas(1), seed=self.seed, alpha=self.alpha,
             cold_age=self.cold_age, cold_probe=self.cold_probe,
-            spike_prob=self.spike_prob, spike_mult=self.spike_mult)
+            spike_prob=self.spike_prob, spike_mult=self.spike_mult,
+            admission=self.admission)
 
     def run(self, policy: Policy, t_sla: float, n_requests: int = 10_000,
             warm: bool = True, store: Optional[ProfileStore] = None
             ) -> SimResult:
         from repro.sim.arrivals import ClosedLoopArrivals
-        res = self._engine().run(policy, t_sla, n_requests,
-                                 arrivals=ClosedLoopArrivals(),
-                                 warm=warm, store=store)
+        engine = self._engine()
+        res = engine.run(policy, t_sla, n_requests,
+                         arrivals=ClosedLoopArrivals(),
+                         warm=warm, store=store)
+        self.router = engine.router  # the run's Router (telemetry/tests)
         return SimResult(
             policy=res.policy,
             t_sla=res.t_sla,

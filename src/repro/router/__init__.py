@@ -1,0 +1,30 @@
+"""Unified Router API: one request/decision surface over every serving
+substrate (closed-loop simulator, discrete-event engine, live executor).
+
+The package owns ModiPick's runtime decision end to end:
+
+- ``api``: the canonical :class:`InferenceRequest` /
+  :class:`RouterDecision` schema (per-request SLAs are first-class);
+- ``admission``: pluggable SLA-aware admission control
+  (:class:`SlaAwareAdmission` sheds requests no pool member can serve
+  inside the remaining budget);
+- ``queueaware``: the shifted-μ store view that folds ``W_queue(m)``
+  into Eq. 1 budgets without touching any policy;
+- ``router``: the :class:`Router` object — batched, admission-gated,
+  substrate-independent selection riding ``policy_vec.select_batch``.
+"""
+from repro.router.admission import (AdmissionController, AdmitAll,
+                                    DepthCapAdmission, SlaAwareAdmission,
+                                    make_admission)
+from repro.router.api import (BudgetBreakdown, InferenceRequest,
+                              RouterDecision)
+from repro.router.queueaware import (QueueAwareSelector, queue_aware_budget,
+                                     shifted_store)
+from repro.router.router import Router
+
+__all__ = [
+    "AdmissionController", "AdmitAll", "DepthCapAdmission",
+    "SlaAwareAdmission", "make_admission", "BudgetBreakdown",
+    "InferenceRequest", "RouterDecision", "QueueAwareSelector",
+    "queue_aware_budget", "shifted_store", "Router",
+]

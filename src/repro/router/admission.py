@@ -1,0 +1,127 @@
+"""Admission control: decide *whether* to serve before deciding *what*
+serves it.
+
+The discrete-event engine historically only had a substrate-level knob —
+``Replica.max_queue_depth`` sheds a request after selection, once its
+replica's FIFO is full.  Router-side admission runs *before* selection,
+against the same telemetry the policy sees, so a request that cannot
+possibly meet its SLA is rejected without spending a selection (or a
+replica slot) on it:
+
+- :class:`AdmitAll` — the default; every request proceeds to selection
+  (substrate caps, if any, still apply downstream).  With this
+  controller the router is behaviourally identical to the pre-router
+  call sites.
+- :class:`DepthCapAdmission` — router-side mirror of the hard cap:
+  reject when every model's least-loaded serving queue is at depth.
+- :class:`SlaAwareAdmission` — the ROADMAP item: reject when
+  ``W_queue(m)`` already exceeds the remaining budget
+  ``T_sla − 2·T_input`` for *every* model, i.e. no pool member can
+  start serving inside the SLA no matter what the policy picks.
+  ``include_service_time=True`` additionally charges each model's mean
+  inference time μ(m), shedding requests that could *start* but not
+  *finish* in time.
+
+Controllers return ``(admitted, reason)``; the reason string lands in
+``RouterDecision.reject_reason`` and, from there, in shed-vs-degrade
+frontier reports.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable, Optional, Tuple
+
+from repro.core.profiles import ProfileTable
+
+from repro.router.api import InferenceRequest
+from repro.router.queueaware import WQueueFn
+
+DepthFn = Callable[[str], int]
+
+
+class AdmissionController:
+    """Base controller: admit everything."""
+    name = "admit_all"
+    # Routers snapshot W_queue telemetry once per batch only when either
+    # queue-aware selection or the controller actually consumes it.
+    needs_w_queue = False
+
+    def admit(self, request: InferenceRequest, t_budget_ms: float,
+              table: ProfileTable, w_queue_fn: Optional[WQueueFn] = None,
+              depth_fn: Optional[DepthFn] = None) -> Tuple[bool, str]:
+        return True, ""
+
+
+class AdmitAll(AdmissionController):
+    """Explicit alias for the default behaviour."""
+
+
+@dataclass
+class DepthCapAdmission(AdmissionController):
+    """Reject when the least-loaded serving queue of every model is at
+    ``max_depth`` — router-side back-pressure applied before selection.
+
+    Depth telemetry is a per-``route_batch`` snapshot: requests admitted
+    earlier in the same batch are not yet queued when later ones are
+    judged, so a simultaneous burst can sail past the cap wholesale.
+    This controller is advisory load-shedding, not a hard bound — pair
+    it with ``Replica.max_queue_depth`` (enforced per request at
+    placement time) when the cap must hold exactly."""
+    max_depth: int
+
+    name = "depth_cap"
+
+    def admit(self, request, t_budget_ms, table, w_queue_fn=None,
+              depth_fn=None) -> Tuple[bool, str]:
+        if depth_fn is None:
+            return True, ""
+        if any(depth_fn(n) < self.max_depth for n in table.names):
+            return True, ""
+        return False, f"every serving queue at depth >= {self.max_depth}"
+
+
+@dataclass
+class SlaAwareAdmission(AdmissionController):
+    """Reject when no model can meet the request's remaining budget.
+
+    A model ``m`` is viable when ``W_queue(m) + slack < T_budget``
+    (plus ``μ(m)`` when ``include_service_time``).  A request whose
+    budget is already non-positive — the network alone ate the SLA — is
+    always shed: every ``W_queue ≥ 0`` exceeds it.
+    """
+    slack_ms: float = 0.0
+    include_service_time: bool = False
+
+    name = "sla_aware"
+    needs_w_queue = True
+
+    def admit(self, request, t_budget_ms, table, w_queue_fn=None,
+              depth_fn=None) -> Tuple[bool, str]:
+        if w_queue_fn is None:
+            return True, ""      # no telemetry: nothing to shed against
+        for i, name in enumerate(table.names):
+            cost = float(w_queue_fn(name)) + self.slack_ms
+            if self.include_service_time:
+                cost += float(table.mu[i])
+            if cost < t_budget_ms:
+                return True, ""
+        return False, "W_queue exceeds the remaining budget for every model"
+
+
+_MODES = {
+    "none": AdmitAll,
+    "admit_all": AdmitAll,
+    "sla_aware": SlaAwareAdmission,
+}
+
+
+def make_admission(mode: str, **kwargs) -> AdmissionController:
+    """Build a controller from a mode string (``none`` / ``admit_all`` /
+    ``depth_cap`` / ``sla_aware``) — the benchmark/CLI axis."""
+    if mode == "depth_cap":
+        return DepthCapAdmission(**kwargs)
+    try:
+        return _MODES[mode](**kwargs)
+    except KeyError:
+        raise ValueError(f"unknown admission mode {mode!r} "
+                         f"(valid: none, admit_all, depth_cap, sla_aware)")

@@ -1,0 +1,79 @@
+"""Canonical request/decision schema for the unified Router API.
+
+Every entry point (the closed-loop paper simulator, the discrete-event
+engine, the live pool executor) expresses ModiPick's runtime decision
+through the same two records:
+
+- :class:`InferenceRequest` — what the device sends: arrival time, its
+  *own* SLA (heterogeneous per-request SLAs are first-class, not a
+  run-level constant), the measured/estimated uplink transfer, and an
+  optional SLA class label for slicing results.
+- :class:`RouterDecision` — what the router answers: the chosen variant,
+  the full budget breakdown (Eq. 1 plus the queue-wait correction), the
+  admission verdict, and the stage trace (base model, exploration set,
+  probabilities) where the selection path produces one.
+
+Times are milliseconds throughout, matching the paper.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Optional, Tuple
+
+from repro.core.policy import SelectionTrace
+
+
+@dataclass
+class InferenceRequest:
+    """One inference request as the router sees it."""
+    t_sla_ms: float                   # this request's SLA (end-to-end)
+    t_input_ms: float                 # one-way input transfer (measured)
+    rid: int = 0
+    arrival_ms: float = 0.0
+    sla_class: Optional[str] = None   # optional label, e.g. "interactive"
+
+
+@dataclass
+class BudgetBreakdown:
+    """Where the SLA went: network, queueing, and what is left for
+    inference.  ``t_budget_ms`` is Eq. 1 (``T_sla − 2·T_input``);
+    ``t_effective_ms`` additionally charges the queue wait of the model
+    the decision routed to (the queue-aware budget)."""
+    t_sla_ms: float
+    t_network_ms: float               # 2 · T_input (conservative, Eq. 1)
+    w_queue_ms: float = 0.0           # W_queue of the chosen model
+
+    @property
+    def t_budget_ms(self) -> float:
+        return self.t_sla_ms - self.t_network_ms
+
+    @property
+    def t_effective_ms(self) -> float:
+        return self.t_budget_ms - self.w_queue_ms
+
+
+@dataclass
+class RouterDecision:
+    """The router's answer for one request."""
+    request: InferenceRequest
+    variant: str                      # "" when the request was shed
+    admitted: bool
+    budget: BudgetBreakdown
+    reject_reason: str = ""
+    trace: Optional[SelectionTrace] = None
+
+    @property
+    def fallback(self) -> bool:
+        return self.trace.fallback if self.trace is not None else False
+
+    @property
+    def base(self) -> Optional[str]:
+        return self.trace.base if self.trace is not None else None
+
+    @property
+    def eligible(self) -> Tuple[str, ...]:
+        return self.trace.eligible if self.trace is not None else ()
+
+    @property
+    def probs(self) -> Tuple[float, ...]:
+        return self.trace.probs if self.trace is not None else ()

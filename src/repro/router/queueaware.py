@@ -1,0 +1,92 @@
+"""Queue-aware ModiPick: fold server load into the latency budget.
+
+The paper's budget (Eq. 1) only charges the network:
+
+    T_budget = T_sla - 2 * T_input
+
+Under concurrent traffic a request additionally waits ``W_queue(m)`` in
+the FIFO of the replica that will serve model ``m``, so the effective
+budget is per-model:
+
+    T_budget(m) = T_sla - 2 * T_input - W_queue(m)
+
+Rather than rewrite every policy to take per-model budgets, we use the
+equivalent shift: a model fits a budget reduced by ``W_queue(m)`` iff the
+model with mean ``mu + W_queue(m)`` fits the plain Eq. 1 budget (sigma is
+unaffected — queueing shifts the location of the latency distribution the
+router reasons about, not the inference jitter).  ``QueueAwareSelector``
+therefore presents any unmodified ``Policy`` with a shifted *view* of the
+profile store and plain ``T_budget``.  With ``W_queue == 0`` the view is
+the store itself, so selection reduces *exactly* to Eq. 1 — the paper's
+behaviour is the zero-load special case.
+
+This module is substrate-independent (it lives under ``repro.router``
+and is consumed by the simulator, the discrete-event engine and the live
+executor alike); ``repro.sim.queueaware`` re-exports it for
+backwards compatibility.
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict
+
+import numpy as np
+
+from repro.core.policy import Policy, SelectionTrace, budget
+from repro.core.profiles import ModelProfile, ProfileStore
+
+WQueueFn = Callable[[str], float]
+
+
+def queue_aware_budget(t_sla: float, t_input: float, w_queue: float) -> float:
+    """T_budget(m) = T_sla - 2*T_input - W_queue(m).  Reduces to Eq. 1
+    when ``w_queue == 0``."""
+    return budget(t_sla, t_input) - w_queue
+
+
+def shifted_store(store: ProfileStore, w_queue_fn: WQueueFn) -> ProfileStore:
+    """View of ``store`` with each model's mean shifted by its estimated
+    queue wait.  Returns ``store`` itself when every shift is zero, so
+    the zero-load path is bit-identical to plain selection.
+
+    The view's ``ProfileTable`` is derived from the base store's cached
+    snapshot: a mu shift cannot change the accuracy order, so the view
+    reuses it instead of re-sorting the pool on every selection."""
+    shifts: Dict[str, float] = {n: max(0.0, float(w_queue_fn(n)))
+                                for n in store.profiles}
+    if not any(shifts.values()):
+        return store
+    view = ProfileStore(
+        [ModelProfile(name=p.name, accuracy=p.accuracy,
+                      mu=p.mu + shifts[p.name], var=p.var, n_obs=p.n_obs,
+                      last_selected=p.last_selected)
+         for p in store.profiles.values()],
+        alpha=store.alpha, cold_age=store.cold_age)
+    view.step = store.step
+    view.base = store.base
+    base = store.table()
+    view._table = base.shifted(
+        np.array([shifts[n] for n in base.names]))
+    return view
+
+
+class QueueAwareSelector:
+    """Wrap any ``Policy`` with per-model queue-wait awareness.
+
+    ``select_traced(store, t_budget, w_queue_fn, rng)`` evaluates the
+    wrapped policy against the shifted store view; the returned trace's
+    names refer to the real store's models.
+    """
+
+    def __init__(self, policy: Policy):
+        self.policy = policy
+        self.name = f"qa_{policy.name}"
+
+    def select_traced(self, store: ProfileStore, t_budget: float,
+                      w_queue_fn: WQueueFn,
+                      rng: np.random.Generator) -> SelectionTrace:
+        return self.policy.select_traced(
+            shifted_store(store, w_queue_fn), t_budget, rng)
+
+    def select(self, store: ProfileStore, t_budget: float,
+               w_queue_fn: WQueueFn, rng: np.random.Generator) -> str:
+        return self.select_traced(store, t_budget, w_queue_fn, rng).chosen

@@ -1,0 +1,183 @@
+"""The unified Router: one request/decision surface for every substrate.
+
+ModiPick's entire runtime contribution is a single decision — pick the
+model that maximises accuracy within ``T_budget = T_sla − 2·T_input
+(− W_queue)`` — and this object is that decision's only implementation.
+The closed-loop paper simulator (``core.simulate``), the discrete-event
+engine (``sim.engine``) and the live pool executor
+(``serving.executor``) all construct a :class:`Router` and feed it
+:class:`~repro.router.api.InferenceRequest` records; what differs
+between them is purely the execution substrate around the returned
+:class:`~repro.router.api.RouterDecision`.
+
+Per batch, the router:
+
+1. snapshots ``W_queue`` telemetry once (when queue-aware selection or
+   the admission controller consumes it);
+2. runs the pluggable :class:`AdmissionController` per request *before*
+   selection — shed requests never spend a selection;
+3. selects for the admitted requests: a singleton batch rides the scalar
+   ``policy.select_traced`` (draw-for-draw identical to the historical
+   per-request call sites, which is what keeps seeded single-SLA goldens
+   bit-identical), larger batches ride the vectorized
+   ``policy_vec.select_batch_traced`` — heterogeneous per-request SLAs
+   are just another column of the batched budget vector.
+
+Queue-aware mode presents the policy with the shifted-μ store view
+(``router.queueaware.shifted_store``), exactly as the per-call-site
+wrappers used to.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Sequence
+
+import numpy as np
+
+from repro.core import policy_vec
+from repro.core.policy import Policy, budget
+from repro.core.profiles import ProfileStore
+
+from repro.router.admission import AdmissionController, AdmitAll, DepthFn
+from repro.router.api import BudgetBreakdown, InferenceRequest, RouterDecision
+from repro.router.queueaware import WQueueFn, shifted_store
+
+
+class Router:
+    """Substrate-independent SLA-aware model router.
+
+    Owns the :class:`ProfileStore` (profiles, queue telemetry, selection
+    bookkeeping), a pluggable :class:`Policy` and a pluggable
+    :class:`AdmissionController`.
+    """
+
+    def __init__(self, store: ProfileStore, policy: Policy, *,
+                 admission: Optional[AdmissionController] = None,
+                 queue_aware: bool = False,
+                 backend: Optional[str] = None,
+                 trace_detail: bool = True):
+        self.store = store
+        self.policy = policy
+        self.admission = admission if admission is not None else AdmitAll()
+        self.queue_aware = queue_aware
+        self.backend = backend
+        # False: batched decisions carry chosen + fallback only (no
+        # per-request eligible/probs tuples) — the event-loop hot-path
+        # mode.  Singleton batches always return the full scalar trace.
+        self.trace_detail = trace_detail
+        base_name = getattr(policy, "name", str(policy))
+        self.name = f"qa_{base_name}" if queue_aware else base_name
+        # Router-side telemetry no pre-router entry point could express.
+        self.n_routed = 0
+        self.n_admitted = 0
+        self.n_shed = 0
+        self.n_fallback = 0
+        self.n_batches = 0
+
+    # ------------------------------------------------------------------
+    def route(self, request: InferenceRequest, rng: np.random.Generator, *,
+              w_queue_fn: Optional[WQueueFn] = None,
+              depth_fn: Optional[DepthFn] = None) -> RouterDecision:
+        """Route one request (a batch of one: scalar selection path)."""
+        return self.route_batch([request], rng, w_queue_fn=w_queue_fn,
+                                depth_fn=depth_fn)[0]
+
+    def route_batch(self, requests: Sequence[InferenceRequest],
+                    rng: np.random.Generator, *,
+                    w_queue_fn: Optional[WQueueFn] = None,
+                    depth_fn: Optional[DepthFn] = None
+                    ) -> List[RouterDecision]:
+        """Route a batch of requests against one telemetry snapshot.
+
+        ``w_queue_fn`` maps a model name to its estimated queue wait
+        (ms) *now*; when omitted in queue-aware mode the store's own
+        EWMA queue telemetry is used.  All requests in the batch see the
+        same snapshot — the engine's speculative-lookahead contract.
+        """
+        reqs = list(requests)
+        if not reqs:
+            return []
+        budgets = np.array([budget(r.t_sla_ms, r.t_input_ms) for r in reqs])
+
+        needs_waits = self.queue_aware or self.admission.needs_w_queue
+        if w_queue_fn is None and needs_waits:
+            # No injected estimator: fall back to the store's own EWMA
+            # queue telemetry (0 until the first observation), for
+            # queue-aware selection and admission alike.
+            w_queue_fn = self.store.queue_wait
+        waits: Optional[Dict[str, float]] = None
+        if w_queue_fn is not None and needs_waits:
+            waits = {n: max(0.0, float(w_queue_fn(n)))
+                     for n in self.store.profiles}
+        w_fn = waits.__getitem__ if waits is not None else None
+
+        tab = self.store.table()
+        decisions: List[Optional[RouterDecision]] = [None] * len(reqs)
+        admitted: List[int] = []
+        for i, req in enumerate(reqs):
+            ok, reason = self.admission.admit(req, float(budgets[i]), tab,
+                                              w_fn, depth_fn)
+            if ok:
+                admitted.append(i)
+            else:
+                decisions[i] = RouterDecision(
+                    request=req, variant="", admitted=False,
+                    reject_reason=reason,
+                    budget=BudgetBreakdown(
+                        t_sla_ms=req.t_sla_ms,
+                        t_network_ms=2.0 * req.t_input_ms,
+                        w_queue_ms=min(waits.values()) if waits else 0.0))
+
+        if admitted:
+            sel_store = (shifted_store(self.store, w_fn)
+                         if (self.queue_aware and w_fn is not None)
+                         else self.store)
+            if len(admitted) == 1:
+                # Scalar path: draw-for-draw identical to a historical
+                # per-request ``select_traced`` call site.
+                i = admitted[0]
+                traces = [self.policy.select_traced(
+                    sel_store, float(budgets[i]), rng)]
+            else:
+                traces = policy_vec.select_batch_traced(
+                    self.policy, sel_store, budgets[admitted], rng,
+                    backend=self.backend, detail=self.trace_detail)
+            for i, trace in zip(admitted, traces):
+                self.store.mark_selected(trace.chosen)
+                req = reqs[i]
+                decisions[i] = RouterDecision(
+                    request=req, variant=trace.chosen, admitted=True,
+                    budget=BudgetBreakdown(
+                        t_sla_ms=req.t_sla_ms,
+                        t_network_ms=2.0 * req.t_input_ms,
+                        w_queue_ms=waits[trace.chosen] if waits else 0.0),
+                    trace=trace)
+                if trace.fallback:
+                    self.n_fallback += 1
+
+        self.n_batches += 1
+        self.n_routed += len(reqs)
+        self.n_admitted += len(admitted)
+        self.n_shed += len(reqs) - len(admitted)
+        return decisions
+
+    # ------------------------------------------------------------------
+    def observe(self, name: str, latency_ms: float) -> None:
+        """Feed a measured inference latency back into the profiles."""
+        self.store.observe(name, latency_ms)
+
+    def observe_queue(self, name: str, wait_ms: float) -> None:
+        """Feed an observed queue wait back into the profiles."""
+        self.store.observe_queue(name, wait_ms)
+
+    def stats(self) -> Dict[str, float]:
+        """Router-side counters: routed/admitted/shed/fallback/batches
+        plus the mean routed batch size."""
+        return {
+            "n_routed": self.n_routed,
+            "n_admitted": self.n_admitted,
+            "n_shed": self.n_shed,
+            "n_fallback": self.n_fallback,
+            "n_batches": self.n_batches,
+            "mean_batch": (self.n_routed / self.n_batches
+                           if self.n_batches else 0.0),
+        }

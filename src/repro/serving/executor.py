@@ -1,11 +1,15 @@
-"""Pool executor + ModiPick router: the live serving path.
+"""Pool executor: the live serving path, as a thin execution shell
+around the unified ``repro.router.Router``.
 
 Per request: simulate the mobile uplink (the paper's measured WiFi/LTE
-distributions), compute the budget (Eq. 1), let the policy pick a variant,
-run real prefill+decode on the pool member, feed the measured wall time
-back into the EWMA profiles, and score the SLA.
+distributions), hand the request to the Router (admission verdict,
+Eq. 1 budget, queue-aware shifted view, policy selection), run real
+prefill+decode on the chosen pool member, feed the measured wall time
+back into the EWMA profiles, and score the SLA against the request's own
+``t_sla`` — per-request SLA mixes need no special casing.
 
-Straggler mitigation:
+Straggler mitigation (execution-shell concerns, deliberately *not* in
+the Router):
 - primary: ModiPick's σ-aware probabilistic routing (a straggling variant
   sees its σ inflate and its selection probability collapse smoothly);
 - secondary: hedged re-issue — when a request exceeds μ + hedge_k·σ of its
@@ -15,15 +19,15 @@ Straggler mitigation:
 """
 from __future__ import annotations
 
-import time
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Callable, Dict, List, Optional
 
 import numpy as np
 
 from repro.core.netmodel import NetworkModel
-from repro.core.policy import Policy, budget
+from repro.core.policy import Policy
 from repro.core.profiles import ModelProfile, ProfileStore
+from repro.router import AdmissionController, InferenceRequest, Router
 from repro.serving.pool import Variant
 
 
@@ -38,6 +42,8 @@ class RequestResult:
     quality: float
     hedged: bool = False
     w_queue_ms: float = 0.0     # queue-wait estimate charged at selection
+    admitted: bool = True       # False: shed by router-side admission
+    reject_reason: str = ""
 
 
 @dataclass
@@ -55,20 +61,19 @@ class PoolExecutor:
     # (or an injected estimator, e.g. a load-emulation model).
     queue_aware: bool = False
     w_queue_fn: Optional[Callable[[str], float]] = None
+    # router-side admission control (None = admit everything)
+    admission: Optional[AdmissionController] = None
 
     def __post_init__(self):
         self.by_name: Dict[str, Variant] = {v.name: v for v in self.variants}
         self.store = ProfileStore(
             [ModelProfile(name=v.name, accuracy=v.quality) for v in self.variants],
             alpha=self.alpha)
+        self.router = Router(self.store, self.policy,
+                             admission=self.admission,
+                             queue_aware=self.queue_aware)
         self.rng = np.random.default_rng(self.seed)
         self.results: List[RequestResult] = []
-        self._qa = None
-        if self.queue_aware:
-            # lazy: the live path only depends on repro.sim when the
-            # queue-aware feature is actually enabled
-            from repro.sim.queueaware import QueueAwareSelector
-            self._qa = QueueAwareSelector(self.policy)
 
     def w_queue(self, name: str) -> float:
         """W_queue(m) estimate for variant ``name``."""
@@ -92,15 +97,20 @@ class PoolExecutor:
     def execute(self, tokens: np.ndarray, t_sla: float,
                 n_decode: int = 2) -> RequestResult:
         t_input = float(self.network.sample(self.rng, 1)[0])
-        t_budget = budget(t_sla, t_input)
-        w_queue = 0.0
-        if self.queue_aware:
-            name = self._qa.select(self.store, t_budget, self.w_queue,
-                                   self.rng)
-            w_queue = self.w_queue(name)
-        else:
-            name = self.policy.select(self.store, t_budget, self.rng)
-        self.store.mark_selected(name)
+        request = InferenceRequest(rid=len(self.results), t_sla_ms=t_sla,
+                                   t_input_ms=t_input)
+        dec = self.router.route(request, self.rng, w_queue_fn=self.w_queue)
+        if not dec.admitted:
+            # Shed before any model ran: the downlink never happens, but
+            # the uplink was already spent — charge it and score a miss.
+            res = RequestResult(
+                variant="", t_input_ms=t_input, t_infer_ms=0.0,
+                t_e2e_ms=t_input, t_sla_ms=t_sla, met_sla=False,
+                quality=0.0, w_queue_ms=dec.budget.w_queue_ms,
+                admitted=False, reject_reason=dec.reject_reason)
+            self.results.append(res)
+            return res
+        name = dec.variant
         v = self.by_name[name]
         v.inflight = getattr(v, "inflight", 0) + 1
         try:
@@ -123,7 +133,8 @@ class PoolExecutor:
         res = RequestResult(
             variant=name, t_input_ms=t_input, t_infer_ms=t_infer,
             t_e2e_ms=e2e, t_sla_ms=t_sla, met_sla=e2e <= t_sla,
-            quality=v.quality, hedged=hedged, w_queue_ms=w_queue)
+            quality=v.quality, hedged=hedged,
+            w_queue_ms=dec.budget.w_queue_ms)
         self.results.append(res)
         return res
 
@@ -132,15 +143,22 @@ class PoolExecutor:
         if not self.results:
             return {}
         rs = self.results
+        served = [r for r in rs if r.admitted]
         usage: Dict[str, int] = {}
-        for r in rs:
+        for r in served:
             usage[r.variant] = usage.get(r.variant, 0) + 1
+        e2e = [r.t_e2e_ms for r in served]
         return {
             "n": len(rs),
+            # shed requests count as SLA misses (met_sla is False);
+            # latency/quality stats cover served requests, zero (like the
+            # simulator's empty summary) when everything was shed
             "sla_attainment": sum(r.met_sla for r in rs) / len(rs),
-            "mean_quality": float(np.mean([r.quality for r in rs])),
-            "mean_latency_ms": float(np.mean([r.t_e2e_ms for r in rs])),
-            "p99_latency_ms": float(np.percentile([r.t_e2e_ms for r in rs], 99)),
+            "mean_quality": float(np.mean([r.quality for r in served]))
+            if served else 0.0,
+            "mean_latency_ms": float(np.mean(e2e)) if served else 0.0,
+            "p99_latency_ms": float(np.percentile(e2e, 99)) if served else 0.0,
             "hedged": sum(r.hedged for r in rs),
-            "usage": {k: v / len(rs) for k, v in sorted(usage.items())},
+            "shed": len(rs) - len(served),
+            "usage": {k: v / len(served) for k, v in sorted(usage.items())},
         }

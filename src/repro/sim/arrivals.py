@@ -70,8 +70,35 @@ class PoissonArrivals(ArrivalProcess):
 
 @dataclass
 class TraceArrivals(ArrivalProcess):
-    """Replay explicit arrival timestamps (ms, ascending)."""
+    """Replay explicit arrival timestamps (ms, non-decreasing).
+
+    Timestamps are validated at construction — finite, non-negative and
+    sorted — so a malformed trace fails loudly here instead of silently
+    producing negative inter-arrivals (events scheduled in the past)
+    deep inside the event loop.  Duplicate timestamps are legal: they
+    model simultaneous arrivals.  Note the engine batches *ENQUEUE*
+    events (arrival + sampled uplink), so duplicates reach one
+    ``route_batch`` call only over a zero-jitter network — under jitter,
+    set ``batch_window_ms`` to at least the uplink spread to group them.
+    """
     times_ms: Sequence[float]
+
+    def __post_init__(self):
+        times = np.asarray(self.times_ms, dtype=np.float64)
+        if times.size == 0:
+            raise ValueError("TraceArrivals needs at least one timestamp")
+        if not np.isfinite(times).all():
+            raise ValueError("TraceArrivals timestamps must be finite "
+                             "(got NaN or inf)")
+        if times[0] < 0.0:
+            raise ValueError("TraceArrivals timestamps must be "
+                             f"non-negative (first is {times[0]!r})")
+        gaps = np.diff(times)
+        if gaps.size and gaps.min() < 0.0:
+            i = int(np.argmin(gaps)) + 1
+            raise ValueError(
+                "TraceArrivals timestamps must be sorted ascending: "
+                f"times_ms[{i}]={times[i]!r} < times_ms[{i-1}]={times[i-1]!r}")
 
     def first(self, rng):
         return float(self.times_ms[0])

@@ -5,13 +5,25 @@ Request lifecycle (all times ms):
     ARRIVAL ── uplink (T_input) ──▶ ENQUEUE ── FIFO wait ──▶ service
             ── inference ──▶ FINISH ── downlink (T_input) ──▶ DEPART
 
-At ENQUEUE the policy selects a model (queue-aware mode presents the
-policy with per-model budgets ``T_sla - 2*T_input - W_queue(m)`` via
-``queueaware.shifted_store``), the request joins the FIFO of the
+At ENQUEUE the engine hands the request to the unified
+``repro.router.Router`` — admission verdict, budget math and model
+selection all live there.  Consecutive same-timestamp ENQUEUE events
+(plus an optional ``batch_window_ms`` speculative lookahead) are grouped
+into ONE ``route_batch`` call, so the event loop rides the vectorized
+policy path; a singleton batch takes the scalar ``select_traced`` route,
+which is draw-for-draw identical to the historical per-request call —
+seeded runs with continuous (never-colliding) event times are
+bit-identical to the pre-router engine.  Queue-aware mode presents the
+policy with per-model budgets ``T_sla - 2*T_input - W_queue(m)`` via the
+router's shifted store view.  The admitted request joins the FIFO of the
 least-loaded capable replica, and — exactly like the live serving path —
 the profile store receives the *inference* latency at FINISH and the
 observed queue wait at service start (telemetry mirroring
 ``serving/batcher.py``).
+
+Per-request SLAs are first-class: ``run(..., sla_for=...)`` assigns each
+request its own ``t_sla_ms`` (heterogeneous mixes become one more column
+of the batched budget vector) and attainment is scored per request.
 
 Driven by ``ClosedLoopArrivals`` over a single shared replica this
 engine replays the paper's §4 closed loop draw-for-draw —
@@ -20,17 +32,17 @@ engine replays the paper's §4 closed loop draw-for-draw —
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Dict, List, Optional, Sequence, Union
+from typing import Callable, Dict, List, Optional, Sequence, Union
 
 import numpy as np
 
 from repro.core.netmodel import NetworkModel
-from repro.core.policy import Policy, budget
+from repro.core.policy import Policy
 from repro.core.profiles import ProfileStore
 from repro.core.zoo import ZooEntry, make_store, true_profiles
+from repro.router import AdmissionController, InferenceRequest, Router
 from repro.sim.arrivals import ArrivalProcess, ClosedLoopArrivals
 from repro.sim.events import ARRIVAL, DEPART, ENQUEUE, FINISH, EventQueue
-from repro.sim.queueaware import QueueAwareSelector
 from repro.sim.replica import (GaussianServiceModel, Replica, ReplicaPool,
                                shared_replicas)
 
@@ -40,10 +52,12 @@ class SimRequest:
     rid: int
     arrival_ms: float
     t_input_ms: float = 0.0
+    t_sla_ms: float = 0.0
     model: str = ""
     replica: str = ""
     fallback: bool = False
     rejected: bool = False
+    reject_reason: str = ""
     enqueue_ms: float = 0.0
     service_start_ms: float = 0.0
     service_ms: float = 0.0
@@ -93,7 +107,9 @@ class ServingSimulator:
                  replicas: Optional[Union[ReplicaPool, List[Replica]]] = None,
                  *, seed: int = 0, alpha: float = 0.1, cold_age: int = 500,
                  cold_probe: bool = True, spike_prob: float = 0.0,
-                 spike_mult: float = 10.0, queue_aware: bool = False):
+                 spike_mult: float = 10.0, queue_aware: bool = False,
+                 admission: Optional[AdmissionController] = None,
+                 batch_window_ms: float = 0.0):
         self.entries = list(entries)
         self.network = network
         if replicas is None:
@@ -107,13 +123,26 @@ class ServingSimulator:
         self.spike_prob = spike_prob
         self.spike_mult = spike_mult
         self.queue_aware = queue_aware
+        self.admission = admission
+        # Speculative lookahead for route_batch grouping: consecutive
+        # ENQUEUE events within this window of the first one are routed
+        # together against one queue snapshot.  0.0 batches only exact
+        # timestamp ties (simultaneous arrivals), which keeps runs with
+        # continuous event times bit-identical to per-request routing.
+        self.batch_window_ms = batch_window_ms
+        self.router: Optional[Router] = None  # built per run()
 
     # ------------------------------------------------------------------
     def run(self, policy: Policy, t_sla: float,
             n_requests: int = 10_000,
             arrivals: Optional[ArrivalProcess] = None,
             warm: bool = True,
-            store: Optional[ProfileStore] = None) -> LoadSimResult:
+            store: Optional[ProfileStore] = None,
+            sla_for: Optional[Callable[[int], float]] = None
+            ) -> LoadSimResult:
+        """Simulate ``n_requests``.  ``sla_for(rid)`` (optional) assigns
+        per-request SLAs; ``t_sla`` remains the reporting label and the
+        default for requests without an override."""
         arrivals = arrivals or ClosedLoopArrivals()
         rng = np.random.default_rng(self.seed)
         store = store or make_store(self.entries, alpha=self.alpha,
@@ -121,7 +150,11 @@ class ServingSimulator:
         truth = true_profiles(self.entries)
         svc = GaussianServiceModel(truth, spike_prob=self.spike_prob,
                                    spike_mult=self.spike_mult)
-        selector = QueueAwareSelector(policy) if self.queue_aware else None
+        # trace_detail=False: the event loop consumes only variant +
+        # fallback, so batched decisions skip stage-tuple materialization.
+        router = Router(store, policy, admission=self.admission,
+                        queue_aware=self.queue_aware, trace_detail=False)
+        self.router = router
         self.pool.reset()
 
         evq = EventQueue()
@@ -134,6 +167,10 @@ class ServingSimulator:
 
         def start_service(replica: Replica, now: float) -> None:
             req: SimRequest = replica.queue.popleft()
+            # A speculatively-routed request (lookahead batching) may be
+            # popped before its uplink completes; service cannot start
+            # before the input is on the server.  No-op without lookahead.
+            now = max(now, req.enqueue_ms)
             req.service_start_ms = now
             store.observe_queue(req.model, req.queue_wait_ms)
             req.service_ms = svc.sample(rng, req.model, replica.speed)
@@ -141,12 +178,20 @@ class ServingSimulator:
             replica.busy_until = now + req.service_ms
             evq.push(now + req.service_ms, FINISH, (replica, req))
 
+        def issue_next_closed_loop(now: float) -> None:
+            nonlocal n_issued
+            if arrivals.closed_loop and n_issued < n_requests:
+                evq.push(arrivals.next_after(rng, now, n_issued),
+                         ARRIVAL, n_issued)
+                n_issued += 1
+
         while evq:
             ev = evq.pop()
             now = ev.time
 
             if ev.kind == ARRIVAL:
                 req = SimRequest(rid=ev.data, arrival_ms=now)
+                req.t_sla_ms = float(sla_for(ev.data)) if sla_for else t_sla
                 req.t_input_ms = float(self.network.sample(rng, 1)[0])
                 evq.push(now + req.t_input_ms, ENQUEUE, req)
                 if not arrivals.closed_loop and n_issued < n_requests:
@@ -156,33 +201,55 @@ class ServingSimulator:
                         n_issued += 1
 
             elif ev.kind == ENQUEUE:
-                req = ev.data
-                req.enqueue_ms = now
-                t_budget = budget(t_sla, req.t_input_ms)
-                if selector is not None:
-                    trace = selector.select_traced(
-                        store, t_budget,
-                        lambda m: self.pool.queue_wait(m, now, store), rng)
-                else:
-                    trace = policy.select_traced(store, t_budget, rng)
-                req.model = trace.chosen
-                req.fallback = trace.fallback
-                store.mark_selected(req.model)
-                replica = self.pool.best_for(req.model, now, store)
-                req.replica = replica.name
-                if replica.full():
-                    req.rejected = True
-                    req.depart_ms = now
-                    rejected.append(req)
-                    if arrivals.closed_loop and n_issued < n_requests:
-                        evq.push(arrivals.next_after(rng, now, n_issued),
-                                 ARRIVAL, n_issued)
-                        n_issued += 1
-                    continue
-                replica.queue.append(req)
-                replica.peak_depth = max(replica.peak_depth, replica.depth())
-                if replica.current is None:
-                    start_service(replica, now)
+                # Group consecutive ENQUEUEs inside the batching window
+                # into ONE route_batch call (vectorized selection).
+                ev.data.enqueue_ms = now
+                batch: List[SimRequest] = [ev.data]
+                limit = now + self.batch_window_ms
+                while evq:
+                    head = evq.peek()
+                    if head.kind != ENQUEUE or head.time > limit:
+                        break
+                    nxt = evq.pop()
+                    nxt.data.enqueue_ms = nxt.time
+                    batch.append(nxt.data)
+                decisions = router.route_batch(
+                    [InferenceRequest(rid=r.rid, arrival_ms=r.arrival_ms,
+                                      t_sla_ms=r.t_sla_ms,
+                                      t_input_ms=r.t_input_ms)
+                     for r in batch],
+                    rng,
+                    w_queue_fn=lambda m: self.pool.queue_wait(m, now, store),
+                    depth_fn=lambda m: min(r.depth() for r in
+                                           self.pool.candidates(m)))
+                for req, dec in zip(batch, decisions):
+                    if not dec.admitted:
+                        # Router-side shed: no selection spent, no
+                        # replica touched.
+                        req.rejected = True
+                        req.reject_reason = dec.reject_reason
+                        req.depart_ms = req.enqueue_ms
+                        rejected.append(req)
+                        issue_next_closed_loop(now)
+                        continue
+                    req.model = dec.variant
+                    req.fallback = dec.fallback
+                    replica = self.pool.best_for(req.model, now, store)
+                    req.replica = replica.name
+                    if replica.full():
+                        req.rejected = True
+                        req.reject_reason = "replica queue full"
+                        # == now without lookahead; a speculatively-routed
+                        # request cannot depart before its own enqueue.
+                        req.depart_ms = max(now, req.enqueue_ms)
+                        rejected.append(req)
+                        issue_next_closed_loop(now)
+                        continue
+                    replica.queue.append(req)
+                    replica.peak_depth = max(replica.peak_depth,
+                                             replica.depth())
+                    if replica.current is None:
+                        start_service(replica, now)
 
             elif ev.kind == FINISH:
                 replica, req = ev.data
@@ -212,9 +279,11 @@ class ServingSimulator:
                              ARRIVAL, n_issued)
                     n_issued += 1
 
-        name = selector.name if selector is not None else \
-            getattr(policy, "name", str(policy))
-        return self._summarise(name, t_sla, truth, completed, rejected)
+        # Per-run request records stay inspectable (per-SLA-class slicing
+        # in tests and frontier studies reads them after run()).
+        self.completed_requests = completed
+        self.rejected_requests = rejected
+        return self._summarise(router.name, t_sla, truth, completed, rejected)
 
     # ------------------------------------------------------------------
     # SoA record-array summary: one pass packs the per-request fields
@@ -222,7 +291,8 @@ class ServingSimulator:
     # reduction instead of a Python list comprehension per metric.
     _REQ_DTYPE = np.dtype([("t_input", "f8"), ("wait", "f8"),
                            ("service", "f8"), ("arrival", "f8"),
-                           ("depart", "f8"), ("model", "i4")])
+                           ("depart", "f8"), ("t_sla", "f8"),
+                           ("model", "i4")])
 
     def _summarise(self, policy_name, t_sla, truth, completed, rejected
                    ) -> LoadSimResult:
@@ -238,11 +308,14 @@ class ServingSimulator:
         model_ids = {name: i for i, name in enumerate(truth)}
         rec = np.fromiter(
             ((r.t_input_ms, r.queue_wait_ms, r.service_ms, r.arrival_ms,
-              r.depart_ms, model_ids[r.model]) for r in completed),
+              r.depart_ms, r.t_sla_ms, model_ids[r.model])
+             for r in completed),
             dtype=self._REQ_DTYPE, count=len(completed))
         # Component sum, identical to SimRequest.e2e_ms per element.
         e2e = 2.0 * rec["t_input"] + rec["wait"] + rec["service"]
-        met = int((e2e <= t_sla).sum())
+        # Scored against each request's own SLA (identical to the scalar
+        # comparison when every request carries the run-level t_sla).
+        met = int((e2e <= rec["t_sla"]).sum())
         acc_by_id = np.array([e.top1 / 100.0 for e in truth.values()])
         counts = np.bincount(rec["model"], minlength=len(model_ids))
         usage = {name: int(counts[i]) for name, i in model_ids.items()

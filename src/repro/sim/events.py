@@ -41,6 +41,10 @@ class EventQueue:
     def pop(self) -> Event:
         return heapq.heappop(self._heap)
 
+    def peek(self) -> Event:
+        """Next event without removing it (the batching lookahead)."""
+        return self._heap[0]
+
     def __len__(self) -> int:
         return len(self._heap)
 
