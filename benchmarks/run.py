@@ -30,6 +30,7 @@ def main() -> None:
     from benchmarks import paper_figures as pf
     from benchmarks import policy_throughput as pt
     from benchmarks import roofline as rl
+    from benchmarks import scenario_suite as sc
 
     # Toy-scale knobs used under --smoke; full scale otherwise.
     fig_kw = {"n": 60} if args.smoke else {}
@@ -58,6 +59,10 @@ def main() -> None:
         "sla_frontier": (lambda: ls.frontier_rows(slas=(250.0,), n=2048))
         if args.smoke else ls.frontier_rows,
         "policy_throughput": lambda: pt.bench_rows(fast=args.fast),
+        # every registered named scenario, end to end (toy scale under
+        # --smoke: the registry's bit-rot guard)
+        "scenario_suite": (lambda: sc.suite_rows(scale=0.1))
+        if args.smoke else sc.suite_rows,
     }
     if args.smoke:
         # Toy pool (2 reduced-width variants, short cache, 6 requests):

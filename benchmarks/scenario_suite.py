@@ -1,0 +1,76 @@
+"""Scenario suite: run every registered named scenario end to end.
+
+One row per scenario headline (`scenario_suite/<name>`), plus the
+slices that make the new mechanisms auditable: per-SLA-class rows for
+scenarios with a class mix (`.../class_<name>` — the
+ClassAwareAdmission protection frontier) and per-epoch rows for
+multi-epoch scenarios (`.../epoch_<e>` — the autoscaler's replica count
+and the SLA attainment trajectory across the load step).
+
+`us_per_call` carries mean end-to-end latency in us (matching
+load_sweep); `derived` carries attainment/accuracy/shed plus the
+slice-specific fields.  `benchmarks/run.py --json` writes the rows to
+``BENCH_scenario_suite.json``; ``--smoke`` runs the same registry at
+``scale≈0.1`` so tier-1 exercises every named scenario.
+"""
+from __future__ import annotations
+
+from dataclasses import replace
+from typing import List, Tuple
+
+MIN_SMOKE_REQUESTS = 30
+
+
+def _scaled(scenario, scale: float):
+    if scale == 1.0:
+        return scenario
+    wl = scenario.workload
+    n = max(int(wl.n_requests * scale), MIN_SMOKE_REQUESTS * wl.epochs)
+    return replace(scenario, workload=replace(wl, n_requests=n))
+
+
+def suite_rows(scale: float = 1.0) -> List[Tuple[str, float, str]]:
+    from repro.scenario import build, get_scenario, list_scenarios
+
+    rows = []
+    for name in list_scenarios():
+        out = build(_scaled(get_scenario(name), scale)).run()
+        r = out.result
+        n_arrived = sum(e.result.n_arrived for e in out.epochs)
+        n_rejected = sum(e.result.n_rejected for e in out.epochs)
+        # headline metrics pool over ALL epochs (completion-weighted),
+        # not just the last one — per-epoch rows carry the trajectory
+        rows.append((
+            f"scenario_suite/{name}",
+            out.mean_latency * 1e3,
+            f"attain={out.sla_attainment:.3f};acc={out.mean_accuracy:.3f};"
+            f"shed={n_rejected / max(n_arrived, 1):.3f};"
+            f"qwait_ms={out.mean_queue_wait:.1f};"
+            f"replicas={out.replica_history[-1]}"))
+        if len(out.epochs) > 1:
+            for e in out.epochs:
+                er = e.result
+                shed = (e.router_stats["n_shed"]
+                        / max(e.router_stats["n_routed"], 1))
+                rows.append((
+                    f"scenario_suite/{name}/epoch_{e.epoch}",
+                    er.mean_latency * 1e3,
+                    f"replicas={e.n_replicas};"
+                    f"attain={er.sla_attainment:.3f};"
+                    f"qwait_ms={er.mean_queue_wait:.1f};"
+                    f"shed={shed:.3f}"))
+        for cls, row in sorted(r.per_class.items()):
+            rows.append((
+                f"scenario_suite/{name}/class_{cls}",
+                row["mean_latency"] * 1e3,
+                f"shed={row['shed_rate']:.3f};"
+                f"attain={row['attainment']:.3f};"
+                f"acc={row['accuracy']:.3f};"
+                f"n={int(row['n_arrived'])}"))
+    return rows
+
+
+if __name__ == "__main__":
+    print("name,us_per_call,derived")
+    for row in suite_rows():
+        print(f"{row[0]},{row[1]:.3f},{row[2]}")

@@ -242,3 +242,27 @@ class RelatedAccurate(_ExplorationSetPolicy):
 
     def _pick_from(self, store, eligible, rng) -> str:
         return max(eligible, key=lambda n: store[n].accuracy)
+
+
+# Name -> class registry: the declarative-config axis (PolicySpec in
+# ``repro.scenario`` builds policies from strings, mirroring
+# ``router.admission.make_admission``).
+POLICIES = {
+    "static_greedy": StaticGreedy,
+    "dynamic_greedy": DynamicGreedy,
+    "modipick": ModiPick,
+    "pure_random": PureRandom,
+    "related_random": RelatedRandom,
+    "related_accurate": RelatedAccurate,
+}
+
+
+def make_policy(name: str, **kwargs) -> Policy:
+    """Build a policy from its registry name (``modipick``,
+    ``dynamic_greedy``, ...) and constructor kwargs."""
+    try:
+        cls = POLICIES[name]
+    except KeyError:
+        raise ValueError(f"unknown policy {name!r} "
+                         f"(valid: {', '.join(sorted(POLICIES))})")
+    return cls(**kwargs)

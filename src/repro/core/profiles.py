@@ -114,7 +114,7 @@ class ProfileStore:
         self.cold_age = cold_age
         self.step = 0
         self._table: Optional[ProfileTable] = None
-        # Identity root for derived views: ``sim.queueaware.shifted_store``
+        # Identity root for derived views: ``router.queueaware.shifted_store``
         # points its per-selection views back at the store they shadow, so
         # store-identity semantics (StaticGreedy's freeze) survive wrapping.
         self.base: "ProfileStore" = self

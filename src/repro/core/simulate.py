@@ -55,6 +55,14 @@ class Simulator:
     # AdmitAll — the paper's closed loop never sheds.
     admission: Optional[AdmissionController] = None
 
+    @classmethod
+    def from_scenario(cls, scenario) -> "Simulator":
+        """Adapter: build the paper's closed-loop driver from a
+        declarative :class:`repro.scenario.Scenario` (the scenario's
+        workload must be ``closed_loop``)."""
+        from repro.scenario.build import build_closed_loop
+        return build_closed_loop(scenario)
+
     def _engine(self):
         from repro.sim.engine import ServingSimulator
         from repro.sim.replica import shared_replicas

@@ -14,6 +14,7 @@ The package owns ModiPick's runtime decision end to end:
   substrate-independent selection riding ``policy_vec.select_batch``.
 """
 from repro.router.admission import (AdmissionController, AdmitAll,
+                                    ClassAwareAdmission, ClassPolicy,
                                     DepthCapAdmission, SlaAwareAdmission,
                                     make_admission)
 from repro.router.api import (BudgetBreakdown, InferenceRequest,
@@ -23,8 +24,9 @@ from repro.router.queueaware import (QueueAwareSelector, queue_aware_budget,
 from repro.router.router import Router
 
 __all__ = [
-    "AdmissionController", "AdmitAll", "DepthCapAdmission",
-    "SlaAwareAdmission", "make_admission", "BudgetBreakdown",
+    "AdmissionController", "AdmitAll", "ClassAwareAdmission", "ClassPolicy",
+    "DepthCapAdmission", "SlaAwareAdmission", "make_admission",
+    "BudgetBreakdown",
     "InferenceRequest", "RouterDecision", "QueueAwareSelector",
     "queue_aware_budget", "shifted_store", "Router",
 ]

@@ -28,8 +28,8 @@ frontier reports.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
-from typing import Callable, Optional, Tuple
+from dataclasses import dataclass, field
+from typing import Callable, Dict, Mapping, Optional, Tuple, Union
 
 from repro.core.profiles import ProfileTable
 
@@ -50,6 +50,11 @@ class AdmissionController:
               table: ProfileTable, w_queue_fn: Optional[WQueueFn] = None,
               depth_fn: Optional[DepthFn] = None) -> Tuple[bool, str]:
         return True, ""
+
+    def reset(self) -> None:
+        """Clear any windowed state (share counters etc.).  Stateless
+        controllers are no-ops; ``Router.reset()`` calls this so epoch
+        windows start clean."""
 
 
 class AdmitAll(AdmissionController):
@@ -108,20 +113,119 @@ class SlaAwareAdmission(AdmissionController):
         return False, "W_queue exceeds the remaining budget for every model"
 
 
+@dataclass(frozen=True)
+class ClassPolicy:
+    """Per-SLA-class admission terms.
+
+    ``protect`` scales how much of the remaining budget the class may
+    spend queueing before it is shed: a model is viable for the class
+    when ``W_queue(m) + slack < protect · T_budget``.  ``protect=1.0``
+    is exactly :class:`SlaAwareAdmission` viability (shed only requests
+    that cannot make the SLA at all); ``protect<1`` sheds the class
+    pre-emptively once queues eat that fraction of its budget — weighted
+    shedding that frees capacity for protected classes.
+
+    ``max_share`` (optional) is an admitted-traffic quota: once queues
+    are non-trivially backed up (``W_queue`` pressure), the class may
+    not exceed this fraction of the controller's admissions in the
+    current window.
+    """
+    protect: float = 1.0
+    max_share: Optional[float] = None
+
+    def __post_init__(self):
+        if not 0.0 < self.protect <= 1.0:
+            raise ValueError(f"protect must be in (0, 1], got {self.protect}")
+        if self.max_share is not None and not 0.0 < self.max_share <= 1.0:
+            raise ValueError(
+                f"max_share must be in (0, 1], got {self.max_share}")
+
+
+@dataclass
+class ClassAwareAdmission(AdmissionController):
+    """SLA-class-differentiated shedding: protect "interactive" by
+    shedding "batch" first.
+
+    ``InferenceRequest.sla_class`` picks the request's
+    :class:`ClassPolicy` (``default`` for unknown/unset classes).  Two
+    mechanisms compose, both judged against the same per-batch telemetry
+    snapshot every other controller sees:
+
+    - **weighted viability** — class ``c`` needs a model with
+      ``W_queue(m) + slack < protect(c) · T_budget``, so low-``protect``
+      classes shed earlier as queues build, leaving headroom for
+      protected ones;
+    - **admitted-share quota** — under pressure (minimum ``W_queue``
+      above ``pressure_ms``), a class with ``max_share`` set may not
+      exceed that fraction of this window's admissions.
+
+    The share window is the controller's lifetime until ``reset()`` —
+    autoscaler epochs (and ``Router.reset()``) clear it.
+    """
+    classes: Mapping[str, Union[ClassPolicy, Mapping]] = field(
+        default_factory=dict)
+    default: Union[ClassPolicy, Mapping] = field(default_factory=ClassPolicy)
+    slack_ms: float = 0.0
+    pressure_ms: float = 0.0
+
+    name = "class_aware"
+    needs_w_queue = True
+
+    def __post_init__(self):
+        coerce = lambda p: p if isinstance(p, ClassPolicy) else ClassPolicy(**p)
+        self.classes = {c: coerce(p) for c, p in dict(self.classes).items()}
+        self.default = coerce(self.default)
+        self.reset()
+
+    def reset(self) -> None:
+        self.n_admitted = 0
+        self.admitted_by_class: Dict[str, int] = {}
+
+    def admit(self, request, t_budget_ms, table, w_queue_fn=None,
+              depth_fn=None) -> Tuple[bool, str]:
+        cls = request.sla_class or ""
+        cp = self.classes.get(cls, self.default)
+        if w_queue_fn is None:
+            self._record(cls)
+            return True, ""      # no telemetry: nothing to shed against
+        waits = [float(w_queue_fn(n)) for n in table.names]
+        if not any(w + self.slack_ms < cp.protect * t_budget_ms
+                   for w in waits):
+            return False, (f"W_queue exceeds {cp.protect:g}x the remaining "
+                           f"budget for every model (class {cls or 'default'!r})")
+        if cp.max_share is not None and min(waits) > self.pressure_ms \
+                and self.n_admitted > 0:
+            share = (self.admitted_by_class.get(cls, 0) + 1) \
+                / (self.n_admitted + 1)
+            if share > cp.max_share:
+                return False, (f"class {cls or 'default'!r} over its "
+                               f"{cp.max_share:g} admitted-share quota "
+                               f"under queue pressure")
+        self._record(cls)
+        return True, ""
+
+    def _record(self, cls: str) -> None:
+        self.n_admitted += 1
+        self.admitted_by_class[cls] = self.admitted_by_class.get(cls, 0) + 1
+
+
 _MODES = {
     "none": AdmitAll,
     "admit_all": AdmitAll,
     "sla_aware": SlaAwareAdmission,
+    "class_aware": ClassAwareAdmission,
 }
 
 
 def make_admission(mode: str, **kwargs) -> AdmissionController:
     """Build a controller from a mode string (``none`` / ``admit_all`` /
-    ``depth_cap`` / ``sla_aware``) — the benchmark/CLI axis."""
+    ``depth_cap`` / ``sla_aware`` / ``class_aware``) — the benchmark,
+    CLI and ``DeploymentSpec.admission`` axis."""
     if mode == "depth_cap":
         return DepthCapAdmission(**kwargs)
     try:
         return _MODES[mode](**kwargs)
     except KeyError:
-        raise ValueError(f"unknown admission mode {mode!r} "
-                         f"(valid: none, admit_all, depth_cap, sla_aware)")
+        raise ValueError(
+            f"unknown admission mode {mode!r} "
+            f"(valid: none, admit_all, depth_cap, sla_aware, class_aware)")

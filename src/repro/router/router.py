@@ -169,9 +169,26 @@ class Router:
         """Feed an observed queue wait back into the profiles."""
         self.store.observe_queue(name, wait_ms)
 
+    def reset(self) -> None:
+        """Zero the ``stats()`` counters (and the admission controller's
+        windowed state, e.g. class-share quotas).
+
+        Counters are lifetime by default; a closed-loop consumer that
+        needs *windowed* rates — the queue-target autoscaler reading
+        shed/fallback rates per epoch — calls ``reset()`` at each window
+        boundary so ``stats()`` reflects only the traffic since."""
+        self.n_routed = 0
+        self.n_admitted = 0
+        self.n_shed = 0
+        self.n_fallback = 0
+        self.n_batches = 0
+        self.admission.reset()
+
     def stats(self) -> Dict[str, float]:
         """Router-side counters: routed/admitted/shed/fallback/batches
-        plus the mean routed batch size."""
+        plus the mean routed batch size.  Lifetime totals since
+        construction or the last ``reset()`` — see ``reset()`` for
+        windowed consumption."""
         return {
             "n_routed": self.n_routed,
             "n_admitted": self.n_admitted,

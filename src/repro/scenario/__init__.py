@@ -1,0 +1,34 @@
+"""Scenario API: declarative workload/deployment specs over the whole
+serving stack.
+
+One :class:`Scenario` — a validated, dict-round-trippable dataclass
+tree (:class:`WorkloadSpec` / :class:`NetworkSpec` /
+:class:`DeploymentSpec` / :class:`PolicySpec`) — describes an entire
+experiment; ``build()`` compiles it into runnable harnesses over the
+three entry points (closed-loop simulator, discrete-event engine, live
+pool executor), which expose the same construction as ``from_scenario``
+adapters.  The registry holds named scenarios (steady / diurnal / burst
+/ class_mix / scale_up) that ``benchmarks/scenario_suite.py`` runs; the
+autoscaler closes the replica loop from ``Router.stats()`` telemetry.
+
+>>> from repro.scenario import get_scenario, build
+>>> out = build(get_scenario("steady")).run()
+>>> out.result.sla_attainment
+"""
+from repro.scenario.autoscale import QueueTargetAutoscaler
+from repro.scenario.build import (EpochResult, ScenarioHarness,
+                                  ScenarioResult, build, build_closed_loop,
+                                  build_engine, build_executor)
+from repro.scenario.registry import get_scenario, list_scenarios, register
+from repro.scenario.spec import (AutoscalerSpec, DeploymentSpec, NetworkSpec,
+                                 PolicySpec, Scenario, SlaClass,
+                                 WorkloadSpec)
+
+__all__ = [
+    "Scenario", "WorkloadSpec", "NetworkSpec", "DeploymentSpec",
+    "PolicySpec", "SlaClass", "AutoscalerSpec",
+    "build", "build_engine", "build_closed_loop", "build_executor",
+    "ScenarioHarness", "ScenarioResult", "EpochResult",
+    "QueueTargetAutoscaler",
+    "register", "get_scenario", "list_scenarios",
+]

@@ -1,0 +1,334 @@
+"""Compile a :class:`~repro.scenario.spec.Scenario` into runnable
+harnesses over the three entry points.
+
+``build(scenario)`` returns a :class:`ScenarioHarness`; the factory
+functions it rides (``build_engine`` / ``build_closed_loop`` /
+``build_executor``) are also what the entry points' ``from_scenario``
+adapters delegate to, so the declarative spec and the historical kwargs
+construct *identical* objects — a steady/Poisson scenario matching the
+seeded engine goldens reproduces them bit-identically.
+
+``ScenarioHarness.run()`` executes the whole scenario: single-epoch
+scenarios are one engine run; multi-epoch scenarios carry the profile
+store across epochs, slice the workload (rate schedule, or an even split
+of a synthesized trace), and — when the deployment declares an
+:class:`~repro.scenario.spec.AutoscalerSpec` — let the
+:class:`~repro.scenario.autoscale.QueueTargetAutoscaler` resize the
+replica pool between epochs from the previous epoch's ``Router.stats()``
+window.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Callable, List, Optional
+
+import numpy as np
+
+from repro.core.netmodel import NetworkModel
+from repro.core.policy import Policy, make_policy
+from repro.core.zoo import PROTOTYPE_POOL, TABLE2, ZooEntry, make_store
+from repro.router.admission import AdmissionController, make_admission
+from repro.scenario.autoscale import QueueTargetAutoscaler
+from repro.scenario.spec import Scenario
+from repro.sim.arrivals import (ArrivalProcess, ClosedLoopArrivals,
+                                PoissonArrivals, TraceArrivals, burst_trace,
+                                diurnal_trace)
+from repro.sim.replica import (ReplicaPool, per_model_replicas,
+                               shared_replicas)
+
+# Class labels are assigned from a seed stream decoupled from the
+# engine's, so a labelled run replays the same service/network draws.
+_CLASS_SEED_SALT = 0x5C3
+# Likewise for synthesized arrival traces: an unsalted seed would feed
+# the thinning sampler and the engine the *same* PCG64 stream,
+# correlating inter-arrival gaps with network/service noise.
+_TRACE_SEED_SALT = 0xA221
+
+
+# ----------------------------------------------------------------------
+# leaf factories
+# ----------------------------------------------------------------------
+
+def build_entries(scenario: Scenario) -> List[ZooEntry]:
+    dep = scenario.deployment
+    zoo = list(TABLE2 if dep.zoo == "table2" else PROTOTYPE_POOL)
+    if not dep.subset:
+        return zoo
+    by_name = {e.name: e for e in zoo}
+    missing = [n for n in dep.subset if n not in by_name]
+    if missing:
+        raise ValueError(f"subset names {missing} not in the {dep.zoo} zoo "
+                         f"(members: {sorted(by_name)})")
+    return [by_name[n] for n in dep.subset]
+
+
+def build_network(scenario: Scenario) -> NetworkModel:
+    net = scenario.network
+    return NetworkModel(net.mean_ms, net.std_ms, net.floor_ms)
+
+
+def build_policy(scenario: Scenario) -> Policy:
+    return make_policy(scenario.policy.policy, **scenario.policy.kwargs)
+
+
+def build_admission(scenario: Scenario) -> Optional[AdmissionController]:
+    dep = scenario.deployment
+    if dep.admission == "none":
+        return None             # Router defaults to AdmitAll
+    return make_admission(dep.admission, **dep.admission_kwargs)
+
+
+def build_replicas(scenario: Scenario,
+                   n_replicas: Optional[int] = None) -> ReplicaPool:
+    dep = scenario.deployment
+    n = dep.replicas if n_replicas is None else n_replicas
+    if dep.topology == "shared":
+        # Explicit speeds only make sense at the declared count; an
+        # autoscaler-resized pool falls back to homogeneous replicas.
+        speeds = list(dep.speeds) if (dep.speeds and n == dep.replicas) \
+            else None
+        return shared_replicas(n, speeds=speeds,
+                               max_queue_depth=dep.max_queue_depth)
+    return per_model_replicas(build_entries(scenario),
+                              replicas_per_model=n,
+                              max_queue_depth=dep.max_queue_depth)
+
+
+def build_arrival_times(scenario: Scenario) -> Optional[np.ndarray]:
+    """Full-run timestamps for trace-shaped workloads (trace / diurnal /
+    burst); None for the generative processes (poisson / closed_loop)."""
+    wl = scenario.workload
+    if wl.arrival == "trace":
+        return np.asarray(wl.times_ms, dtype=np.float64)
+    if wl.arrival == "diurnal":
+        return np.asarray(diurnal_trace(
+            wl.n_requests, wl.rate_rps, period_ms=wl.period_ms,
+            amplitude=wl.amplitude,
+            seed=scenario.seed ^ _TRACE_SEED_SALT).times_ms)
+    if wl.arrival == "burst":
+        return np.asarray(burst_trace(
+            wl.n_requests, wl.rate_rps, burst_rate_rps=wl.burst_rate_rps,
+            burst_every_ms=wl.burst_every_ms, burst_len_ms=wl.burst_len_ms,
+            seed=scenario.seed ^ _TRACE_SEED_SALT).times_ms)
+    return None
+
+
+# ----------------------------------------------------------------------
+# entry-point adapters (the from_scenario implementations)
+# ----------------------------------------------------------------------
+
+def build_engine(scenario: Scenario, *, n_replicas: Optional[int] = None,
+                 seed: Optional[int] = None):
+    """Scenario -> ``sim.engine.ServingSimulator`` (any workload)."""
+    from repro.sim.engine import ServingSimulator
+    pol = scenario.policy
+    dep = scenario.deployment
+    return ServingSimulator(
+        build_entries(scenario), build_network(scenario),
+        build_replicas(scenario, n_replicas),
+        seed=scenario.seed if seed is None else seed,
+        alpha=pol.alpha, cold_age=pol.cold_age, cold_probe=pol.cold_probe,
+        spike_prob=dep.spike_prob, spike_mult=dep.spike_mult,
+        queue_aware=pol.queue_aware, admission=build_admission(scenario),
+        batch_window_ms=dep.batch_window_ms, backend=pol.backend)
+
+
+def build_closed_loop(scenario: Scenario):
+    """Scenario -> ``core.simulate.Simulator`` (closed-loop workloads)."""
+    from repro.core.simulate import Simulator
+    if scenario.workload.arrival != "closed_loop":
+        raise ValueError(
+            "core.simulate.Simulator replays the paper's closed loop; "
+            f"scenario {scenario.name!r} has "
+            f"arrival={scenario.workload.arrival!r} — build the "
+            "discrete-event engine for open-loop workloads")
+    pol = scenario.policy
+    dep = scenario.deployment
+    return Simulator(
+        entries=build_entries(scenario), network=build_network(scenario),
+        seed=scenario.seed, alpha=pol.alpha, cold_age=pol.cold_age,
+        cold_probe=pol.cold_probe, spike_prob=dep.spike_prob,
+        spike_mult=dep.spike_mult, admission=build_admission(scenario))
+
+
+def build_executor(scenario: Scenario, variants, **overrides):
+    """Scenario -> ``serving.executor.PoolExecutor`` over a real pool."""
+    from repro.serving.executor import PoolExecutor
+    pol = scenario.policy
+    kw = dict(seed=scenario.seed, alpha=pol.alpha,
+              queue_aware=pol.queue_aware,
+              admission=build_admission(scenario), backend=pol.backend)
+    kw.update(overrides)
+    return PoolExecutor(list(variants), build_network(scenario),
+                        build_policy(scenario), **kw)
+
+
+# ----------------------------------------------------------------------
+# the runnable harness
+# ----------------------------------------------------------------------
+
+@dataclass
+class EpochResult:
+    """One epoch of a scenario run."""
+    epoch: int
+    n_replicas: int
+    result: object               # sim.engine.LoadSimResult
+    router_stats: dict
+
+
+@dataclass
+class ScenarioResult:
+    """A full scenario run: per-epoch results plus pooled headlines."""
+    scenario: Scenario
+    epochs: List[EpochResult] = field(default_factory=list)
+
+    @property
+    def result(self):
+        """The last epoch's engine result (the whole run when
+        single-epoch)."""
+        return self.epochs[-1].result
+
+    @property
+    def replica_history(self) -> List[int]:
+        return [e.n_replicas for e in self.epochs]
+
+    @property
+    def attainment_history(self) -> List[float]:
+        return [e.result.sla_attainment for e in self.epochs]
+
+    @property
+    def sla_attainment(self) -> float:
+        """Arrival-weighted attainment across epochs."""
+        return self._pooled("sla_attainment", "n_arrived")
+
+    # Latency/accuracy/queue statistics only cover completed requests,
+    # so their run-level pooling weights by completions.
+    @property
+    def mean_latency(self) -> float:
+        return self._pooled("mean_latency", "n_completed")
+
+    @property
+    def mean_accuracy(self) -> float:
+        return self._pooled("mean_accuracy", "n_completed")
+
+    @property
+    def mean_queue_wait(self) -> float:
+        return self._pooled("mean_queue_wait", "n_completed")
+
+    def _pooled(self, attr: str, weight: str) -> float:
+        n = sum(getattr(e.result, weight) for e in self.epochs)
+        return sum(getattr(e.result, attr) * getattr(e.result, weight)
+                   for e in self.epochs) / max(n, 1)
+
+
+class ScenarioHarness:
+    """A compiled scenario: entry-point factories plus ``run()``."""
+
+    def __init__(self, scenario: Scenario):
+        self.scenario = scenario
+        self._class_names, self._class_slas, self._class_ids = \
+            self._assign_classes()
+        # Synthesized diurnal/burst traces are per-run constants; render
+        # once here instead of re-thinning per epoch.
+        self._times = build_arrival_times(scenario)
+
+    # -- per-request SLA-class assignment ------------------------------
+    def _assign_classes(self):
+        wl = self.scenario.workload
+        if not wl.classes:
+            return (), np.empty(0), np.empty(0, dtype=np.int64)
+        names = tuple(c.name for c in wl.classes)
+        slas = np.array([c.t_sla_ms for c in wl.classes])
+        w = np.array([c.weight for c in wl.classes])
+        rng = np.random.default_rng(self.scenario.seed ^ _CLASS_SEED_SALT)
+        ids = rng.choice(len(names), size=wl.n_requests, p=w / w.sum())
+        return names, slas, ids
+
+    def sla_for(self, offset: int = 0) -> Optional[Callable[[int], float]]:
+        """Per-request SLA override from the class mix (None without
+        one).  ``offset`` re-bases request ids for epoch slices."""
+        if not self._class_names:
+            return None
+        return lambda rid: float(self._class_slas[
+            self._class_ids[offset + rid]])
+
+    def class_for(self, offset: int = 0) -> Optional[Callable[[int], str]]:
+        if not self._class_names:
+            return None
+        return lambda rid: self._class_names[self._class_ids[offset + rid]]
+
+    # -- entry-point factories -----------------------------------------
+    def engine(self, n_replicas: Optional[int] = None,
+               seed: Optional[int] = None):
+        return build_engine(self.scenario, n_replicas=n_replicas, seed=seed)
+
+    def closed_loop(self):
+        return build_closed_loop(self.scenario)
+
+    def executor(self, variants, **overrides):
+        return build_executor(self.scenario, variants, **overrides)
+
+    def store(self):
+        pol = self.scenario.policy
+        return make_store(build_entries(self.scenario), alpha=pol.alpha,
+                          cold_age=pol.cold_age, warm=pol.warm)
+
+    # -- workload slicing ----------------------------------------------
+    def epoch_sizes(self) -> List[int]:
+        wl = self.scenario.workload
+        base, extra = divmod(wl.n_requests, wl.epochs)
+        return [base + (1 if e < extra else 0) for e in range(wl.epochs)]
+
+    def arrivals(self, epoch: int = 0) -> ArrivalProcess:
+        """The arrival process for one epoch (the whole run when
+        single-epoch)."""
+        wl = self.scenario.workload
+        if wl.arrival == "closed_loop":
+            return ClosedLoopArrivals(think_ms=wl.think_ms)
+        if wl.arrival == "poisson":
+            rate = (wl.rate_schedule[epoch] if wl.rate_schedule
+                    else wl.rate_rps)
+            return PoissonArrivals(rate)
+        times = self._times
+        sizes = self.epoch_sizes()
+        lo = sum(sizes[:epoch])
+        chunk = times[lo:lo + sizes[epoch]]
+        # Each epoch replays its slice from t=0: epochs are consecutive
+        # observation windows, not one shared timeline.
+        return TraceArrivals(chunk - chunk[0])
+
+    # -- execution -----------------------------------------------------
+    def run(self) -> ScenarioResult:
+        """Run the scenario end to end on the discrete-event engine."""
+        sc = self.scenario
+        wl = sc.workload
+        policy = build_policy(sc)
+        store = self.store()
+        scaler = (QueueTargetAutoscaler(sc.deployment.autoscaler)
+                  if sc.deployment.autoscaler is not None else None)
+        n_replicas = sc.deployment.replicas
+        out = ScenarioResult(scenario=sc)
+        offset = 0
+        for epoch, n_epoch in enumerate(self.epoch_sizes()):
+            # Epoch 0 runs at the scenario seed (bit-identical to the
+            # equivalent single-epoch run); later epochs shift it so the
+            # windows draw fresh network/service noise.
+            eng = self.engine(n_replicas=n_replicas,
+                              seed=sc.seed + epoch)
+            res = eng.run(policy, wl.t_sla_ms, n_epoch,
+                          arrivals=self.arrivals(epoch),
+                          warm=sc.policy.warm, store=store,
+                          sla_for=self.sla_for(offset),
+                          class_for=self.class_for(offset))
+            stats = eng.router.stats()
+            out.epochs.append(EpochResult(epoch=epoch, n_replicas=n_replicas,
+                                          result=res, router_stats=stats))
+            if scaler is not None:
+                n_replicas = scaler.decide(n_replicas, stats, res)
+            offset += n_epoch
+        return out
+
+
+def build(scenario: Scenario) -> ScenarioHarness:
+    """Compile a scenario; ``Scenario.build()`` delegates here."""
+    return ScenarioHarness(scenario)

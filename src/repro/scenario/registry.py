@@ -1,0 +1,135 @@
+"""Named-scenario registry: the library of declarative experiments.
+
+``register()`` any :class:`~repro.scenario.spec.Scenario` under its
+name; ``get_scenario()`` / ``list_scenarios()`` look them up.  The
+built-ins cover the shapes the ROADMAP calls for, and every one is run
+at toy scale by ``benchmarks/run.py --smoke`` (tier-1's bit-rot guard)
+and at full scale by ``benchmarks/scenario_suite.py``:
+
+- ``steady`` — open-loop Poisson at a rate the pool absorbs; the
+  config mirrors the seeded queue-aware engine golden, so the Scenario
+  path is pinned bit-identical to the historical kwargs path;
+- ``diurnal`` — sinusoidal day/night load through the diurnal trace
+  synthesizer: the pool is sized for the valley, the peak exercises
+  queue-aware spreading;
+- ``burst`` — flash-crowd square wave with SLA-aware admission:
+  shed-vs-degrade under a 20x load spike;
+- ``class_mix`` — interactive/batch SLA mix under overload with
+  class-aware admission: weighted shedding protects the interactive
+  class at the batch class's expense;
+- ``scale_up`` — a 10x load step under a queue-target autoscaler: SLA
+  attainment collapses at the step and recovers as replicas are added,
+  with no manual pool edits.
+"""
+from __future__ import annotations
+
+from typing import Dict, List
+
+from repro.scenario.spec import (AutoscalerSpec, DeploymentSpec,
+                                 NetworkSpec, PolicySpec, Scenario, SlaClass,
+                                 WorkloadSpec)
+
+_REGISTRY: Dict[str, Scenario] = {}
+
+
+def register(scenario: Scenario, *, replace: bool = False) -> Scenario:
+    """Add a scenario under its name; re-registration requires
+    ``replace=True`` (guards against accidental shadowing)."""
+    if scenario.name in _REGISTRY and not replace:
+        raise ValueError(f"scenario {scenario.name!r} already registered "
+                         "(pass replace=True to overwrite)")
+    _REGISTRY[scenario.name] = scenario
+    return scenario
+
+
+def get_scenario(name: str) -> Scenario:
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise KeyError(f"unknown scenario {name!r} "
+                       f"(registered: {', '.join(sorted(_REGISTRY))})")
+
+
+def list_scenarios() -> List[str]:
+    return sorted(_REGISTRY)
+
+
+# ----------------------------------------------------------------------
+# built-ins
+# ----------------------------------------------------------------------
+
+# The load-sweep network model used by every serving benchmark.
+_NET = NetworkSpec(mean_ms=50.0, std_ms=25.0)
+
+# Mirrors the seeded golden `test_golden_queue_aware_open_loop_unchanged`
+# (engine kwargs: seed=3, per-model replicas, queue-aware ModiPick,
+# Poisson 30 rps, 600 requests, 250 ms SLA) — the round-trip test pins
+# the Scenario path bit-identical to it.
+register(Scenario(
+    name="steady",
+    workload=WorkloadSpec(arrival="poisson", rate_rps=30.0,
+                          n_requests=600, t_sla_ms=250.0),
+    network=_NET,
+    deployment=DeploymentSpec(topology="per_model"),
+    policy=PolicySpec(policy="modipick", kwargs={"t_threshold": 20.0},
+                      queue_aware=True),
+    seed=3))
+
+register(Scenario(
+    name="diurnal",
+    workload=WorkloadSpec(arrival="diurnal", rate_rps=12.0,
+                          period_ms=20_000.0, amplitude=0.9,
+                          n_requests=1500, t_sla_ms=250.0),
+    network=_NET,
+    deployment=DeploymentSpec(topology="per_model"),
+    policy=PolicySpec(policy="modipick", kwargs={"t_threshold": 20.0},
+                      queue_aware=True),
+    seed=5))
+
+register(Scenario(
+    name="burst",
+    workload=WorkloadSpec(arrival="burst", rate_rps=4.0,
+                          burst_rate_rps=80.0, burst_every_ms=10_000.0,
+                          burst_len_ms=1_500.0, n_requests=1500,
+                          t_sla_ms=250.0),
+    network=_NET,
+    deployment=DeploymentSpec(topology="per_model", admission="sla_aware"),
+    policy=PolicySpec(policy="modipick", kwargs={"t_threshold": 20.0},
+                      queue_aware=True),
+    seed=5))
+
+# One shared replica at 60 rps is genuinely saturated.  Class-blind
+# admission sheds the *interactive* class first (its tighter budget goes
+# non-viable first); class-aware weighted shedding inverts that — batch
+# (protect 0.35) drains early, interactive keeps most of its attainment.
+register(Scenario(
+    name="class_mix",
+    workload=WorkloadSpec(
+        arrival="poisson", rate_rps=60.0, n_requests=1500, t_sla_ms=250.0,
+        classes=(SlaClass("interactive", t_sla_ms=250.0, weight=0.5),
+                 SlaClass("batch", t_sla_ms=400.0, weight=0.5))),
+    network=_NET,
+    deployment=DeploymentSpec(
+        topology="shared", replicas=1,
+        admission="class_aware",
+        admission_kwargs={"classes": {
+            "interactive": {"protect": 1.0},
+            "batch": {"protect": 0.35, "max_share": 0.6},
+        }}),
+    policy=PolicySpec(policy="modipick", kwargs={"t_threshold": 20.0},
+                      queue_aware=True),
+    seed=7))
+
+register(Scenario(
+    name="scale_up",
+    workload=WorkloadSpec(arrival="poisson", rate_rps=4.0,
+                          rate_schedule=(4.0, 40.0, 40.0, 40.0, 40.0),
+                          epochs=5, n_requests=2000, t_sla_ms=250.0),
+    network=_NET,
+    deployment=DeploymentSpec(
+        topology="shared", replicas=1,
+        autoscaler=AutoscalerSpec(target_queue_ms=25.0, max_shed_rate=0.02,
+                                  min_replicas=1, max_replicas=8, step=2)),
+    policy=PolicySpec(policy="modipick", kwargs={"t_threshold": 20.0},
+                      queue_aware=True),
+    seed=9))

@@ -1,0 +1,308 @@
+"""The declarative Scenario spec: one plain-data tree describing an
+entire ModiPick experiment.
+
+Every experiment in this repo used to be wired by hand — a dozen kwargs
+spread over three entry points (``core.simulate.Simulator``,
+``sim.engine.ServingSimulator``, ``serving.executor.PoolExecutor``).  A
+:class:`Scenario` captures the same degrees of freedom as one validated,
+serializable record:
+
+- :class:`WorkloadSpec` — what arrives: the arrival process (closed
+  loop, Poisson, explicit trace, or the diurnal/burst synthesizers),
+  how many requests, the SLA, an optional per-class SLA mix
+  (:class:`SlaClass` weights), and an optional per-epoch rate schedule
+  (the load-step shape the autoscaler study needs);
+- :class:`NetworkSpec` — the mobile uplink model (§4's truncated
+  normal);
+- :class:`DeploymentSpec` — what serves: zoo subset, replica topology
+  and speeds, queue caps, admission mode, lookahead batching window,
+  and the optional :class:`AutoscalerSpec` closing the replica loop;
+- :class:`PolicySpec` — what decides: policy + kwargs, queue-aware
+  budgets, vectorized backend, and the profile-learning knobs.
+
+Specs are frozen dataclasses that validate at construction and
+round-trip losslessly through plain dicts (``to_dict``/``from_dict``):
+every leaf is JSON/TOML-representable, so a scenario can live in a
+config file, a benchmark registry, or a service request body.
+``scenario.build()`` (``repro.scenario.build``) compiles the spec into
+runnable harnesses over any of the three entry points.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Any, Dict, Mapping, Optional, Tuple
+
+ARRIVAL_KINDS = ("closed_loop", "poisson", "trace", "diurnal", "burst")
+TOPOLOGIES = ("per_model", "shared")
+ZOOS = ("table2", "prototype")
+ADMISSION_MODES = ("none", "admit_all", "depth_cap", "sla_aware",
+                   "class_aware")
+
+
+def _require(cond: bool, msg: str) -> None:
+    if not cond:
+        raise ValueError(msg)
+
+
+@dataclass(frozen=True)
+class SlaClass:
+    """One class in a per-request SLA mix: requests are labelled
+    ``name``, carry ``t_sla_ms``, and arrive in proportion to
+    ``weight``."""
+    name: str
+    t_sla_ms: float
+    weight: float = 1.0
+
+    def __post_init__(self):
+        _require(bool(self.name), "SlaClass needs a non-empty name")
+        _require(self.t_sla_ms > 0.0,
+                 f"SlaClass {self.name!r}: t_sla_ms must be positive")
+        _require(self.weight > 0.0,
+                 f"SlaClass {self.name!r}: weight must be positive")
+
+
+@dataclass(frozen=True)
+class WorkloadSpec:
+    """What arrives, how fast, and under which SLAs."""
+    arrival: str = "poisson"
+    n_requests: int = 1000
+    t_sla_ms: float = 250.0          # run-level SLA / reporting label
+    rate_rps: float = 10.0           # poisson / diurnal / burst base rate
+    rate_schedule: Tuple[float, ...] = ()  # per-epoch poisson rates
+    epochs: int = 1
+    think_ms: float = 0.0            # closed_loop
+    times_ms: Tuple[float, ...] = ()  # trace (n_requests derives from it)
+    period_ms: float = 60_000.0      # diurnal day length
+    amplitude: float = 0.8           # diurnal swing, [0, 1)
+    burst_rate_rps: float = 0.0      # burst peak
+    burst_every_ms: float = 10_000.0
+    burst_len_ms: float = 1_000.0
+    classes: Tuple[SlaClass, ...] = ()  # per-class SLA mix ((): single SLA)
+
+    def __post_init__(self):
+        _require(self.arrival in ARRIVAL_KINDS,
+                 f"arrival must be one of {ARRIVAL_KINDS}, "
+                 f"got {self.arrival!r}")
+        _require(self.n_requests > 0, "n_requests must be positive")
+        _require(self.t_sla_ms > 0.0, "t_sla_ms must be positive")
+        _require(self.epochs >= 1, "epochs must be >= 1")
+        if self.arrival in ("poisson", "diurnal", "burst"):
+            _require(self.rate_rps > 0.0,
+                     f"{self.arrival} arrivals need rate_rps > 0")
+        if self.arrival == "trace":
+            _require(len(self.times_ms) > 0,
+                     "trace arrivals need explicit times_ms")
+            # A trace IS the workload: its length defines the request
+            # count (n_requests is derived, never independently set).
+            object.__setattr__(self, "n_requests", len(self.times_ms))
+        if self.arrival == "diurnal":
+            _require(0.0 <= self.amplitude < 1.0,
+                     f"amplitude must be in [0, 1), got {self.amplitude}")
+            _require(self.period_ms > 0.0, "period_ms must be positive")
+        if self.arrival == "burst":
+            _require(self.burst_rate_rps >= self.rate_rps,
+                     "burst_rate_rps must be >= rate_rps")
+            _require(0.0 < self.burst_len_ms <= self.burst_every_ms,
+                     "need 0 < burst_len_ms <= burst_every_ms")
+        if self.rate_schedule:
+            _require(self.arrival == "poisson",
+                     "rate_schedule only applies to poisson arrivals")
+            _require(len(self.rate_schedule) == self.epochs,
+                     f"rate_schedule has {len(self.rate_schedule)} entries "
+                     f"for {self.epochs} epochs")
+            _require(all(r > 0.0 for r in self.rate_schedule),
+                     "rate_schedule rates must be positive")
+        _require(self.n_requests >= self.epochs,
+                 f"n_requests ({self.n_requests}) must cover every epoch "
+                 f"({self.epochs}) — empty epochs are not runnable")
+        names = [c.name for c in self.classes]
+        _require(len(names) == len(set(names)),
+                 f"duplicate SLA class names: {names}")
+
+
+@dataclass(frozen=True)
+class NetworkSpec:
+    """Mobile uplink model: truncated normal, ms (Fig. 1 / §4)."""
+    mean_ms: float = 57.87           # campus WiFi (Table: CAMPUS_WIFI)
+    std_ms: float = 30.78
+    floor_ms: float = 0.1
+
+    def __post_init__(self):
+        _require(self.mean_ms > 0.0, "mean_ms must be positive")
+        _require(self.std_ms >= 0.0, "std_ms must be non-negative")
+
+
+@dataclass(frozen=True)
+class AutoscalerSpec:
+    """Closed-loop replica scaling targets (``QueueTargetAutoscaler``)."""
+    target_queue_ms: float = 50.0    # scale up above this mean queue wait
+    max_shed_rate: float = 0.02      # ... or above this router shed rate
+    max_fallback_rate: float = 0.25  # ... or above this router fallback rate
+    min_replicas: int = 1
+    max_replicas: int = 8
+    step: int = 1                    # replicas added/removed per epoch
+    low_utilization: float = 0.3     # scale down below this mean busy frac
+
+    def __post_init__(self):
+        _require(self.target_queue_ms > 0.0, "target_queue_ms must be > 0")
+        _require(0.0 <= self.max_shed_rate <= 1.0,
+                 "max_shed_rate must be in [0, 1]")
+        _require(0.0 <= self.max_fallback_rate <= 1.0,
+                 "max_fallback_rate must be in [0, 1]")
+        _require(1 <= self.min_replicas <= self.max_replicas,
+                 "need 1 <= min_replicas <= max_replicas")
+        _require(self.step >= 1, "step must be >= 1")
+
+
+@dataclass(frozen=True)
+class DeploymentSpec:
+    """What serves: zoo subset, replica topology, admission, batching."""
+    zoo: str = "table2"              # "table2" | "prototype"
+    subset: Tuple[str, ...] = ()     # () = the whole zoo
+    topology: str = "per_model"      # "per_model" | "shared"
+    replicas: int = 1                # per model, or total when shared
+    speeds: Tuple[float, ...] = ()   # shared only; () = all 1.0
+    max_queue_depth: Optional[int] = None
+    admission: str = "none"
+    admission_kwargs: Dict[str, Any] = field(default_factory=dict)
+    batch_window_ms: float = 0.0
+    spike_prob: float = 0.0          # co-tenant latency spikes
+    spike_mult: float = 10.0
+    autoscaler: Optional[AutoscalerSpec] = None
+
+    def __post_init__(self):
+        _require(self.zoo in ZOOS,
+                 f"zoo must be one of {ZOOS}, got {self.zoo!r}")
+        _require(self.topology in TOPOLOGIES,
+                 f"topology must be one of {TOPOLOGIES}, "
+                 f"got {self.topology!r}")
+        _require(self.replicas >= 1, "replicas must be >= 1")
+        if self.speeds:
+            _require(self.topology == "shared",
+                     "speeds only apply to the shared topology")
+            _require(len(self.speeds) == self.replicas,
+                     f"{len(self.speeds)} speeds for {self.replicas} "
+                     "replicas")
+        _require(self.admission in ADMISSION_MODES,
+                 f"admission must be one of {ADMISSION_MODES}, "
+                 f"got {self.admission!r}")
+        _require(self.max_queue_depth is None or self.max_queue_depth >= 1,
+                 "max_queue_depth must be >= 1 (or None)")
+        _require(self.batch_window_ms >= 0.0,
+                 "batch_window_ms must be non-negative")
+        _require(0.0 <= self.spike_prob <= 1.0,
+                 "spike_prob must be in [0, 1]")
+
+
+# Kwargs a bare PolicySpec(policy=...) resolves to: the repo-wide
+# benchmark settings (ModiPick's 20 ms window, StaticGreedy frozen at
+# the suite's default SLA).
+_POLICY_DEFAULT_KWARGS: Dict[str, Dict[str, Any]] = {
+    "modipick": {"t_threshold": 20.0},
+    "related_random": {"t_threshold": 20.0},
+    "related_accurate": {"t_threshold": 20.0},
+    "static_greedy": {"t_sla": 250.0},
+}
+
+
+@dataclass(frozen=True)
+class PolicySpec:
+    """What decides, and how its profiles learn.  Empty ``kwargs``
+    normalize to the policy's defaults (``_POLICY_DEFAULT_KWARGS``) at
+    construction, so specs always serialize fully resolved."""
+    policy: str = "modipick"
+    kwargs: Dict[str, Any] = field(default_factory=dict)
+    queue_aware: bool = False
+    backend: Optional[str] = None    # policy_vec backend override
+    alpha: float = 0.1               # EWMA step for profile updates
+    cold_age: int = 500
+    cold_probe: bool = True
+    warm: bool = True                # seed profiles at the true (mu, sigma)
+
+    def __post_init__(self):
+        from repro.core.policy import POLICIES, make_policy
+        _require(self.policy in POLICIES,
+                 f"policy must be one of {tuple(sorted(POLICIES))}, "
+                 f"got {self.policy!r}")
+        _require(self.backend in (None, "auto", "numpy", "jax"),
+                 f"backend must be None, auto, numpy or jax, "
+                 f"got {self.backend!r}")
+        _require(0.0 < self.alpha <= 1.0, "alpha must be in (0, 1]")
+        _require(self.cold_age >= 1, "cold_age must be >= 1")
+        if not self.kwargs:
+            object.__setattr__(
+                self, "kwargs",
+                dict(_POLICY_DEFAULT_KWARGS.get(self.policy, {})))
+        try:
+            # fail at construction, not at build()/run() time
+            make_policy(self.policy, **self.kwargs)
+        except TypeError as e:
+            raise ValueError(
+                f"kwargs {self.kwargs!r} do not construct policy "
+                f"{self.policy!r}: {e}") from e
+
+
+@dataclass(frozen=True)
+class Scenario:
+    """One named, self-contained experiment description."""
+    name: str
+    workload: WorkloadSpec = field(default_factory=WorkloadSpec)
+    network: NetworkSpec = field(default_factory=NetworkSpec)
+    deployment: DeploymentSpec = field(default_factory=DeploymentSpec)
+    policy: PolicySpec = field(default_factory=PolicySpec)
+    seed: int = 0
+
+    def __post_init__(self):
+        _require(bool(self.name), "Scenario needs a non-empty name")
+        if self.deployment.autoscaler is not None:
+            _require(self.workload.epochs > 1,
+                     "an autoscaler needs workload.epochs > 1 "
+                     "(it acts between epochs)")
+
+    # -- serialization -------------------------------------------------
+    def to_dict(self) -> Dict[str, Any]:
+        """Plain-data form: nested dicts/lists of JSON/TOML scalars."""
+        return _plain(dataclasses.asdict(self))
+
+    @classmethod
+    def from_dict(cls, d: Mapping[str, Any]) -> "Scenario":
+        """Inverse of :meth:`to_dict`:
+        ``Scenario.from_dict(s.to_dict()) == s``."""
+        d = dict(d)
+        wl = dict(d.get("workload", {}))
+        if "classes" in wl:
+            wl["classes"] = tuple(SlaClass(**c) for c in wl["classes"])
+        _tupled(wl, "rate_schedule", "times_ms")
+        dep = dict(d.get("deployment", {}))
+        if dep.get("autoscaler") is not None:
+            dep["autoscaler"] = AutoscalerSpec(**dep["autoscaler"])
+        _tupled(dep, "subset", "speeds")
+        return cls(
+            name=d["name"],
+            workload=WorkloadSpec(**wl),
+            network=NetworkSpec(**d.get("network", {})),
+            deployment=DeploymentSpec(**dep),
+            policy=PolicySpec(**d.get("policy", {})),
+            seed=int(d.get("seed", 0)))
+
+    # -- compilation ---------------------------------------------------
+    def build(self):
+        """Compile into a runnable :class:`repro.scenario.build.ScenarioHarness`."""
+        from repro.scenario.build import build
+        return build(self)
+
+
+def _plain(x: Any) -> Any:
+    """asdict leaves tuples as tuples; JSON/TOML want lists."""
+    if isinstance(x, dict):
+        return {k: _plain(v) for k, v in x.items()}
+    if isinstance(x, (list, tuple)):
+        return [_plain(v) for v in x]
+    return x
+
+
+def _tupled(d: Dict[str, Any], *keys: str) -> None:
+    for k in keys:
+        if k in d:
+            d[k] = tuple(d[k])

@@ -63,6 +63,18 @@ class PoolExecutor:
     w_queue_fn: Optional[Callable[[str], float]] = None
     # router-side admission control (None = admit everything)
     admission: Optional[AdmissionController] = None
+    # policy_vec backend override for batched selection
+    backend: Optional[str] = None
+
+    @classmethod
+    def from_scenario(cls, scenario, variants: List[Variant],
+                      **overrides) -> "PoolExecutor":
+        """Adapter: build the live execution shell from a declarative
+        :class:`repro.scenario.Scenario` — the scenario supplies the
+        network/policy/admission/queue-aware surface, the caller supplies
+        the real model pool (``variants``)."""
+        from repro.scenario.build import build_executor
+        return build_executor(scenario, variants, **overrides)
 
     def __post_init__(self):
         self.by_name: Dict[str, Variant] = {v.name: v for v in self.variants}
@@ -71,7 +83,8 @@ class PoolExecutor:
             alpha=self.alpha)
         self.router = Router(self.store, self.policy,
                              admission=self.admission,
-                             queue_aware=self.queue_aware)
+                             queue_aware=self.queue_aware,
+                             backend=self.backend)
         self.rng = np.random.default_rng(self.seed)
         self.results: List[RequestResult] = []
 

@@ -31,19 +31,21 @@ Paper-section → code map:
   ``engine.rate_sweep`` for SLA-attainment-vs-load curves
   (``benchmarks/load_sweep.py``).
 """
+from repro.router.queueaware import (QueueAwareSelector, queue_aware_budget,
+                                     shifted_store)
 from repro.sim.arrivals import (ArrivalProcess, ClosedLoopArrivals,
-                                PoissonArrivals, TraceArrivals)
+                                PoissonArrivals, TraceArrivals, burst_trace,
+                                diurnal_trace)
 from repro.sim.engine import (LoadSimResult, ServingSimulator, SimRequest,
                               rate_sweep)
 from repro.sim.events import ARRIVAL, DEPART, ENQUEUE, FINISH, EventQueue
-from repro.sim.queueaware import (QueueAwareSelector, queue_aware_budget,
-                                  shifted_store)
 from repro.sim.replica import (GaussianServiceModel, Replica, ReplicaPool,
                                per_model_replicas, shared_replicas)
 
 __all__ = [
     "ArrivalProcess", "ClosedLoopArrivals", "PoissonArrivals",
-    "TraceArrivals", "LoadSimResult", "ServingSimulator", "SimRequest",
+    "TraceArrivals", "burst_trace", "diurnal_trace", "LoadSimResult",
+    "ServingSimulator", "SimRequest",
     "rate_sweep", "ARRIVAL", "DEPART", "ENQUEUE", "FINISH", "EventQueue",
     "QueueAwareSelector", "queue_aware_budget", "shifted_store",
     "GaussianServiceModel", "Replica", "ReplicaPool", "per_model_replicas",

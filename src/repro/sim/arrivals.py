@@ -110,3 +110,59 @@ class TraceArrivals(ArrivalProcess):
 
     def __len__(self) -> int:
         return len(self.times_ms)
+
+
+# ----------------------------------------------------------------------
+# Trace synthesizers: non-homogeneous Poisson processes rendered to
+# explicit timestamps (so they replay through ``TraceArrivals`` and its
+# construction-time validation).  Both use Lewis–Shedler thinning:
+# candidate arrivals are drawn at the peak rate and kept with
+# probability rate(t)/rate_peak, which is exact for any bounded rate
+# function.  Deterministic given ``seed``.
+# ----------------------------------------------------------------------
+
+def _thin(n: int, rate_peak_rps: float, rate_at, seed: int) -> np.ndarray:
+    rng = np.random.default_rng(seed)
+    gap_ms = 1000.0 / rate_peak_rps
+    out = np.empty(n, dtype=np.float64)
+    t, k = 0.0, 0
+    while k < n:
+        t += float(rng.exponential(gap_ms))
+        if rng.random() * rate_peak_rps <= rate_at(t):
+            out[k] = t
+            k += 1
+    return out
+
+
+def diurnal_trace(n: int, base_rate_rps: float, *,
+                  period_ms: float = 60_000.0, amplitude: float = 0.8,
+                  phase: float = 0.0, seed: int = 0) -> TraceArrivals:
+    """Sinusoidal day/night load: ``rate(t) = base · (1 + amplitude ·
+    sin(2πt/period + phase))``.  ``amplitude ∈ [0, 1)`` keeps the rate
+    positive; one ``period_ms`` is one synthetic "day"."""
+    if not 0.0 <= amplitude < 1.0:
+        raise ValueError(f"amplitude must be in [0, 1), got {amplitude}")
+    if base_rate_rps <= 0.0 or period_ms <= 0.0:
+        raise ValueError("base_rate_rps and period_ms must be positive")
+    rate = lambda t: base_rate_rps * (
+        1.0 + amplitude * np.sin(2.0 * np.pi * t / period_ms + phase))
+    return TraceArrivals(_thin(n, base_rate_rps * (1.0 + amplitude),
+                               rate, seed))
+
+
+def burst_trace(n: int, base_rate_rps: float, *, burst_rate_rps: float,
+                burst_every_ms: float = 10_000.0,
+                burst_len_ms: float = 1_000.0,
+                seed: int = 0) -> TraceArrivals:
+    """Square-wave load: quiet traffic at ``base_rate_rps`` punctuated by
+    a ``burst_len_ms`` burst at ``burst_rate_rps`` every
+    ``burst_every_ms`` (the flash-crowd / retry-storm shape admission
+    control is for)."""
+    if base_rate_rps <= 0.0 or burst_rate_rps < base_rate_rps:
+        raise ValueError("need 0 < base_rate_rps <= burst_rate_rps")
+    if not 0.0 < burst_len_ms <= burst_every_ms:
+        raise ValueError("need 0 < burst_len_ms <= burst_every_ms")
+    rate = lambda t: (burst_rate_rps
+                      if (t % burst_every_ms) < burst_len_ms
+                      else base_rate_rps)
+    return TraceArrivals(_thin(n, burst_rate_rps, rate, seed))

@@ -31,7 +31,7 @@ engine replays the paper's §4 closed loop draw-for-draw —
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
+from dataclasses import dataclass, field
 from typing import Callable, Dict, List, Optional, Sequence, Union
 
 import numpy as np
@@ -53,6 +53,7 @@ class SimRequest:
     arrival_ms: float
     t_input_ms: float = 0.0
     t_sla_ms: float = 0.0
+    sla_class: str = ""
     model: str = ""
     replica: str = ""
     fallback: bool = False
@@ -94,6 +95,11 @@ class LoadSimResult:
     model_usage: Dict[str, float]          # fraction of completed
     replica_utilization: Dict[str, float]  # busy time / horizon
     horizon_ms: float = 0.0
+    # Per-SLA-class slice (populated when any request carried a class
+    # label): class -> {n_arrived, n_rejected, attainment, accuracy,
+    # shed_rate, mean_latency}.  Attainment counts rejections as misses,
+    # exactly like the run-level number.
+    per_class: Dict[str, Dict[str, float]] = field(default_factory=dict)
 
     @property
     def violation_rate(self) -> float:
@@ -109,7 +115,8 @@ class ServingSimulator:
                  cold_probe: bool = True, spike_prob: float = 0.0,
                  spike_mult: float = 10.0, queue_aware: bool = False,
                  admission: Optional[AdmissionController] = None,
-                 batch_window_ms: float = 0.0):
+                 batch_window_ms: float = 0.0,
+                 backend: Optional[str] = None):
         self.entries = list(entries)
         self.network = network
         if replicas is None:
@@ -124,6 +131,8 @@ class ServingSimulator:
         self.spike_mult = spike_mult
         self.queue_aware = queue_aware
         self.admission = admission
+        # policy_vec backend override for batched route_batch selection
+        self.backend = backend
         # Speculative lookahead for route_batch grouping: consecutive
         # ENQUEUE events within this window of the first one are routed
         # together against one queue snapshot.  0.0 batches only exact
@@ -132,17 +141,32 @@ class ServingSimulator:
         self.batch_window_ms = batch_window_ms
         self.router: Optional[Router] = None  # built per run()
 
+    @classmethod
+    def from_scenario(cls, scenario, *,
+                      n_replicas: Optional[int] = None) -> "ServingSimulator":
+        """Adapter: build an engine from a declarative
+        :class:`repro.scenario.Scenario` (``n_replicas`` overrides the
+        deployment's replica count — the autoscaler knob)."""
+        from repro.scenario.build import build_engine
+        return build_engine(scenario, n_replicas=n_replicas)
+
     # ------------------------------------------------------------------
     def run(self, policy: Policy, t_sla: float,
             n_requests: int = 10_000,
             arrivals: Optional[ArrivalProcess] = None,
             warm: bool = True,
             store: Optional[ProfileStore] = None,
-            sla_for: Optional[Callable[[int], float]] = None
+            sla_for: Optional[Callable[[int], float]] = None,
+            class_for: Optional[Callable[[int], str]] = None
             ) -> LoadSimResult:
         """Simulate ``n_requests``.  ``sla_for(rid)`` (optional) assigns
         per-request SLAs; ``t_sla`` remains the reporting label and the
-        default for requests without an override."""
+        default for requests without an override.  ``class_for(rid)``
+        (optional) labels each request with an SLA class — the label
+        rides ``InferenceRequest.sla_class`` into class-aware admission
+        and slices the summary's ``per_class`` rows; it never touches
+        the RNG, so labelled runs stay draw-for-draw identical to
+        unlabelled ones under the same seed."""
         arrivals = arrivals or ClosedLoopArrivals()
         rng = np.random.default_rng(self.seed)
         store = store or make_store(self.entries, alpha=self.alpha,
@@ -153,7 +177,8 @@ class ServingSimulator:
         # trace_detail=False: the event loop consumes only variant +
         # fallback, so batched decisions skip stage-tuple materialization.
         router = Router(store, policy, admission=self.admission,
-                        queue_aware=self.queue_aware, trace_detail=False)
+                        queue_aware=self.queue_aware, backend=self.backend,
+                        trace_detail=False)
         self.router = router
         self.pool.reset()
 
@@ -192,6 +217,7 @@ class ServingSimulator:
             if ev.kind == ARRIVAL:
                 req = SimRequest(rid=ev.data, arrival_ms=now)
                 req.t_sla_ms = float(sla_for(ev.data)) if sla_for else t_sla
+                req.sla_class = str(class_for(ev.data)) if class_for else ""
                 req.t_input_ms = float(self.network.sample(rng, 1)[0])
                 evq.push(now + req.t_input_ms, ENQUEUE, req)
                 if not arrivals.closed_loop and n_issued < n_requests:
@@ -216,7 +242,8 @@ class ServingSimulator:
                 decisions = router.route_batch(
                     [InferenceRequest(rid=r.rid, arrival_ms=r.arrival_ms,
                                       t_sla_ms=r.t_sla_ms,
-                                      t_input_ms=r.t_input_ms)
+                                      t_input_ms=r.t_input_ms,
+                                      sla_class=r.sla_class or None)
                      for r in batch],
                     rng,
                     w_queue_fn=lambda m: self.pool.queue_wait(m, now, store),
@@ -304,7 +331,8 @@ class ServingSimulator:
                 sla_attainment=0.0, mean_accuracy=0.0, mean_latency=0.0,
                 p50_latency=0.0, p99_latency=0.0, mean_queue_wait=0.0,
                 p99_queue_wait=0.0, peak_queue_depth=0, model_usage={},
-                replica_utilization={})
+                replica_utilization={},
+                per_class=self._per_class(completed, rejected, {}))
         model_ids = {name: i for i, name in enumerate(truth)}
         rec = np.fromiter(
             ((r.t_input_ms, r.queue_wait_ms, r.service_ms, r.arrival_ms,
@@ -345,7 +373,37 @@ class ServingSimulator:
                          for k, v in sorted(usage.items())},
             replica_utilization={r.name: r.busy_ms / horizon
                                  for r in self.pool.replicas},
-            horizon_ms=horizon)
+            horizon_ms=horizon,
+            per_class=self._per_class(
+                completed, rejected,
+                {name: e.top1 / 100.0 for name, e in truth.items()}))
+
+    @staticmethod
+    def _per_class(completed, rejected, acc_of) -> Dict[str, Dict[str, float]]:
+        """Class-sliced attainment/accuracy/shed rows; {} when no request
+        carried a class label (the common single-class run)."""
+        if not any(r.sla_class for r in completed) and \
+                not any(r.sla_class for r in rejected):
+            return {}
+        out: Dict[str, Dict[str, float]] = {}
+        classes = sorted({r.sla_class for r in completed}
+                         | {r.sla_class for r in rejected})
+        for cls in classes:
+            done = [r for r in completed if r.sla_class == cls]
+            shed = [r for r in rejected if r.sla_class == cls]
+            n = len(done) + len(shed)
+            met = sum(r.e2e_ms <= r.t_sla_ms for r in done)
+            out[cls or "default"] = {
+                "n_arrived": n,
+                "n_rejected": len(shed),
+                "shed_rate": len(shed) / max(n, 1),
+                "attainment": met / max(n, 1),
+                "accuracy": (float(np.mean([acc_of[r.model] for r in done]))
+                             if done else 0.0),
+                "mean_latency": (float(np.mean([r.e2e_ms for r in done]))
+                                 if done else 0.0),
+            }
+        return out
 
 
 def rate_sweep(sim: ServingSimulator, policy_fn, rates_rps: Sequence[float],

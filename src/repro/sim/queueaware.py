@@ -1,8 +1,17 @@
-"""Backwards-compatibility shim: the queue-aware machinery is now part
-of the substrate-independent router layer, ``repro.router.queueaware``.
-Import from there (or from ``repro.router``) in new code."""
+"""Deprecated location: the queue-aware machinery is part of the
+substrate-independent router layer, ``repro.router.queueaware``.
+Importing this module works but warns; new code should import from
+``repro.router.queueaware`` (or ``repro.router``).
+"""
+import warnings
+
 from repro.router.queueaware import (QueueAwareSelector, WQueueFn,
                                      queue_aware_budget, shifted_store)
+
+warnings.warn(
+    "repro.sim.queueaware is deprecated; import from "
+    "repro.router.queueaware (or repro.router) instead",
+    DeprecationWarning, stacklevel=2)
 
 __all__ = ["QueueAwareSelector", "WQueueFn", "queue_aware_budget",
            "shifted_store"]

@@ -510,6 +510,9 @@ def test_benchmarks_smoke_mode(tmp_path):
                    "load_sweep/admission_sla_aware/rate_40,",
                    "sla_frontier/modipick/sla_250,",
                    "policy_throughput/numpy/batch_1000,",
+                   "scenario_suite/steady,",
+                   "scenario_suite/class_mix/class_interactive,",
+                   "scenario_suite/scale_up/epoch_4,",
                    "live_pool/modipick,"):
         assert marker in out.stdout, marker
     # smoke writes suffixed records so toy-scale rows can never clobber
