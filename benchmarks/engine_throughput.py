@@ -1,0 +1,106 @@
+"""Discrete-event engine throughput: requests/sec and events/sec at
+10k / 100k / 1M simulated requests.
+
+The ROADMAP north star is serving millions-of-users traffic "as fast as
+the hardware allows"; after the SoA hot-path refactor a 1M-request
+scenario is a routine run, and this benchmark keeps it that way.  Rows:
+
+    engine_throughput/<config>/n_<N>
+
+with ``us_per_call`` = wall microseconds per simulated request and
+``derived`` carrying ``reqps`` (requests/sec), ``evps`` (lifecycle
+events/sec: ARRIVAL+ENQUEUE+FINISH+DEPART per completed request,
+ARRIVAL+ENQUEUE per shed one) and the run's attainment as a sanity
+anchor.  Configs:
+
+- ``singleton``: queue-aware ModiPick over the paper's per-model
+  topology at rate 40 — continuous event times, every routing decision
+  a scalar (batch-of-1) selection; the load_sweep workhorse.
+- ``batched``: the same policy over 4 replicas per model, driven by
+  200-wide simultaneous arrival bursts over a zero-jitter network —
+  same-timestamp ENQUEUEs group into one ``route_batch`` call, the
+  vectorized selection regime.
+
+``benchmarks/run.py --json`` records the rows in
+``BENCH_engine_throughput.json`` so the perf trajectory is tracked
+across PRs; ``--smoke`` runs a 2k-request row per config as the tier-1
+bit-rot guard.
+"""
+from __future__ import annotations
+
+import time
+from typing import List, Sequence, Tuple
+
+Row = Tuple[str, float, str]
+
+SIZES = (10_000, 100_000, 1_000_000)
+SMOKE_SIZES = (2_000,)
+SLA_MS = 250.0
+SEED = 3
+
+
+BURST = 200           # simultaneous arrivals per burst (batched config)
+BURST_EVERY_MS = 400.0
+
+
+def _burst_trace(n: int):
+    """n timestamps in BURST-wide simultaneous spikes every
+    BURST_EVERY_MS — duplicate times are legal and, over a zero-jitter
+    network, reach the router as one route_batch call per burst."""
+    import numpy as np
+    from repro.sim.arrivals import TraceArrivals
+    bursts = -(-n // BURST)
+    times = np.repeat(np.arange(bursts) * BURST_EVERY_MS, BURST)[:n]
+    return TraceArrivals(times)
+
+
+def _configs():
+    from repro.core.netmodel import NetworkModel
+    from repro.core.zoo import TABLE2
+    from repro.sim.arrivals import PoissonArrivals
+    from repro.sim.engine import ServingSimulator
+    from repro.sim.replica import per_model_replicas
+
+    return {
+        "singleton": (
+            lambda: ServingSimulator(TABLE2, NetworkModel(50.0, 25.0),
+                                     per_model_replicas(TABLE2),
+                                     seed=SEED, queue_aware=True),
+            lambda n: PoissonArrivals(40.0)),
+        "batched": (
+            lambda: ServingSimulator(
+                TABLE2, NetworkModel(50.0, 0.0),
+                per_model_replicas(TABLE2, replicas_per_model=4),
+                seed=SEED, queue_aware=True),
+            _burst_trace),
+    }
+
+
+def bench_rows(fast: bool = False,
+               sizes: Sequence[int] = None) -> List[Row]:
+    from repro.core.policy import ModiPick
+
+    sizes = tuple(sizes or (SMOKE_SIZES if fast else SIZES))
+    rows: List[Row] = []
+    for name, (make_engine, make_arrivals) in _configs().items():
+        for n in sizes:
+            eng = make_engine()
+            t0 = time.perf_counter()
+            r = eng.run(ModiPick(t_threshold=20.0), SLA_MS, n,
+                        arrivals=make_arrivals(n))
+            wall = time.perf_counter() - t0
+            events = 4 * r.n_completed + 2 * r.n_rejected
+            rows.append((
+                f"engine_throughput/{name}/n_{n}",
+                wall * 1e6 / max(n, 1),
+                f"reqps={n / wall:.0f};evps={events / wall:.0f};"
+                f"wall_s={wall:.2f};attain={r.sla_attainment:.3f};"
+                f"shed={r.n_rejected};"
+                f"batches={eng.router.stats()['n_batches']}"))
+    return rows
+
+
+if __name__ == "__main__":
+    print("name,us_per_call,derived")
+    for row in bench_rows():
+        print(f"{row[0]},{row[1]:.3f},{row[2]}")

@@ -140,6 +140,11 @@ def frontier_rows(slas=FRONTIER_SLAS, n: int = FRONTIER_BATCH,
         budgets = sla - 2.0 * t_input
         for name, pol in [("modipick", ModiPick(t_threshold=20.0)),
                           ("dynamic_greedy", DynamicGreedy())]:
+            # Untimed warm-up on a throwaway rng: the auto backend's
+            # fused path jit-compiles once per (pool, batch-bucket);
+            # the rows record steady-state selections/sec, and the
+            # measured rng stream is untouched.
+            pol.select_batch(store, budgets, np.random.default_rng(0))
             t0 = time.perf_counter()
             names = pol.select_batch(store, budgets, rng)
             dt = time.perf_counter() - t0

@@ -73,8 +73,12 @@ def bench_rows(fast: bool = False,
                      f"selps={scalar_selps:.0f};measured_n={m}"))
 
         for backend in ("numpy", "jax"):
+            # Generator construction stays outside the timed region,
+            # matching the scalar loop's pre-built rng — the rows
+            # measure selection, not np.random.default_rng().
+            brng = np.random.default_rng(1)
             run = lambda: policy.select_batch(  # noqa: E731
-                store, budgets, np.random.default_rng(1), backend=backend)
+                store, budgets, brng, backend=backend)
             try:
                 run()  # warm-up (jit compile for the jax path)
             except Exception as e:  # pragma: no cover - missing accelerator

@@ -26,6 +26,7 @@ def main() -> None:
     if args.smoke:
         args.fast = True
 
+    from benchmarks import engine_throughput as et
     from benchmarks import load_sweep as ls
     from benchmarks import paper_figures as pf
     from benchmarks import policy_throughput as pt
@@ -59,6 +60,8 @@ def main() -> None:
         "sla_frontier": (lambda: ls.frontier_rows(slas=(250.0,), n=2048))
         if args.smoke else ls.frontier_rows,
         "policy_throughput": lambda: pt.bench_rows(fast=args.fast),
+        # events/sec + requests/sec at 10k/100k/1M (2k under --smoke)
+        "engine_throughput": lambda: et.bench_rows(fast=args.fast),
         # every registered named scenario, end to end (toy scale under
         # --smoke: the registry's bit-rot guard)
         "scenario_suite": (lambda: sc.suite_rows(scale=0.1))

@@ -26,6 +26,12 @@ class NetworkModel:
         x = rng.normal(self.mean_ms, self.std_ms, size=n)
         return np.maximum(x, self.floor_ms)
 
+    def sample_one(self, rng: np.random.Generator) -> float:
+        """Scalar draw — one standard normal off the stream, exactly
+        like ``sample(rng, 1)[0]``, without the length-1 array churn."""
+        x = rng.normal(self.mean_ms, self.std_ms)
+        return x if x > self.floor_ms else self.floor_ms
+
     @staticmethod
     def from_cv(mean_ms: float, cv: float) -> "NetworkModel":
         return NetworkModel(mean_ms=mean_ms, std_ms=mean_ms * cv)

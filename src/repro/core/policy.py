@@ -14,6 +14,7 @@ Time units are milliseconds throughout, matching the paper.
 from __future__ import annotations
 
 import math
+from bisect import bisect_right
 from dataclasses import dataclass
 from typing import List, Optional, Sequence, Tuple
 
@@ -59,6 +60,14 @@ class Policy:
         from repro.core import policy_vec
         return policy_vec.select_batch(self, store, t_budgets, rng,
                                        backend=backend)
+
+    def select_lean(self, store: ProfileStore, t_budget: float,
+                    rng: np.random.Generator) -> SelectionTrace:
+        """Hot-path scalar selection: identical pick and RNG consumption
+        to :meth:`select_traced`, but the returned trace carries only
+        ``chosen`` + ``fallback`` (no eligible/probs tuples).  Policies
+        without a cheaper core just run the full trace."""
+        return self.select_traced(store, t_budget, rng)
 
 
 def _fastest(store: ProfileStore) -> str:
@@ -114,6 +123,16 @@ class DynamicGreedy(Policy):
             if tab.mu[i] <= t_budget:
                 return SelectionTrace(chosen=tab.names[i])
         return SelectionTrace(chosen=tab.names[tab.fastest], fallback=True)
+
+    def select_lean(self, store, t_budget, rng) -> SelectionTrace:
+        """Same greedy walk over the snapshot's python-float cache —
+        identical comparisons, no numpy scalar boxing per step."""
+        tab = store.table()
+        mu, _, _, _, order, names = tab.scalar_cache()
+        for i in order:
+            if mu[i] <= t_budget:
+                return SelectionTrace(chosen=names[i])
+        return SelectionTrace(chosen=names[tab.fastest], fallback=True)
 
 
 class ModiPick(Policy):
@@ -198,6 +217,78 @@ class ModiPick(Policy):
                               eligible=tuple(tab.names[i] for i in idxs),
                               probs=tuple(probs))
 
+    def select_lean(self, store, t_budget, rng) -> SelectionTrace:
+        """Bit-identical scalar hot path: every stage re-expressed over
+        the snapshot's python-float ``scalar_cache`` and the categorical
+        draw replicated from ``Generator.choice``'s internals (cumsum,
+        tail-normalize, one uniform, right-bisect) — same IEEE doubles,
+        same RNG consumption, same pick as :meth:`select_traced`, with
+        no numpy dispatch or trace materialisation per request.  Pools
+        wider than 8 fall back to the numpy stages (numpy's pairwise
+        summation stops being replicable past its 8-lane unroll)."""
+        tab = store.table()
+        mu, sigma, musig, acc, order, names = tab.scalar_cache()
+        t_u = t_budget
+        t_l = t_u - self.t_threshold
+        base_idx = -1
+        for i in order:
+            if musig[i] < t_u and mu[i] - sigma[i] < t_l:
+                base_idx = i
+                break
+        if base_idx < 0:
+            return SelectionTrace(chosen=names[tab.fastest], fallback=True)
+        half = abs(t_l - mu[base_idx]) + sigma[base_idx]
+        lo, hi = t_l - half, t_l + half
+        idxs = [i for i in range(len(mu))
+                if lo <= mu[i] <= hi and musig[i] < t_u]
+        if base_idx not in idxs:  # base always eligible by construction
+            idxs.append(base_idx)
+        k = len(idxs)
+        if k > 8:
+            probs = self._probs_indices(tab, idxs, t_u, t_l)
+            pick = int(rng.choice(k, p=probs))
+            return SelectionTrace(chosen=names[idxs[pick]])
+        # Eq. 3–4 utilities, element-for-element the ops of
+        # ``_probs_indices`` (python floats are the same IEEE doubles;
+        # pow(x, 1.0) == x exactly, so γ=1 skips the libm call).
+        g = self.gamma
+        if g == 1.0:
+            u = [(acc[i] if acc[i] > EPS else EPS)
+                 * (t_u - musig[i])
+                 / (den if (den := abs(t_l - mu[i])) > EPS else EPS)
+                 for i in idxs]
+        else:
+            u = [(acc[i] if acc[i] > EPS else EPS) ** g
+                 * (t_u - musig[i])
+                 / (den if (den := abs(t_l - mu[i])) > EPS else EPS)
+                 for i in idxs]
+        # numpy's small-n sum: sequential below 8, 8-lane tree at 8.
+        if k == 8:
+            total = ((u[0] + u[1]) + (u[2] + u[3])) \
+                + ((u[4] + u[5]) + (u[6] + u[7]))
+        else:
+            total = 0.0
+            for x in u:
+                total += x
+        if not math.isfinite(total) or total <= 0:
+            u = [1.0 / k] * k
+        else:
+            u = [x / total for x in u]
+        # Generator.choice(k, p=u) replica: cumsum, normalize by the
+        # tail, one uniform, searchsorted-right.
+        cdf = []
+        t = 0.0
+        for x in u:
+            t += x
+            cdf.append(t)
+        last = cdf[-1]
+        if last != 1.0:
+            cdf = [c / last for c in cdf]
+        pick = bisect_right(cdf, rng.random())
+        if pick >= k:  # float tail guard, as searchsorted clips
+            pick = k - 1
+        return SelectionTrace(chosen=names[idxs[pick]])
+
 
 class PureRandom(Policy):
     """§4.4 stage-1 counterpart: uniform over all managed models."""
@@ -213,6 +304,10 @@ class _ExplorationSetPolicy(ModiPick):
 
     def _pick_from(self, store, eligible, rng) -> str:
         raise NotImplementedError
+
+    # ModiPick's lean core runs ModiPick's stage 3 — subclasses replace
+    # stage 3, so they must fall back to their own full trace.
+    select_lean = Policy.select_lean
 
     def select_traced(self, store, t_budget, rng) -> SelectionTrace:
         tab = store.table()

@@ -34,6 +34,7 @@ set ``numpy`` to force the reference path, ``jax`` to force the kernel.
 """
 from __future__ import annotations
 
+import functools
 import os
 from typing import List, Optional, Sequence, Tuple, Union
 
@@ -44,7 +45,11 @@ from repro.core.policy import (EPS, DynamicGreedy, ModiPick, Policy,
                                SelectionTrace, StaticGreedy)
 from repro.core.profiles import ProfileStore, ProfileTable
 
-# Batch size at which ModiPick's stage 3 moves to the jitted/Pallas path.
+# Batch size at which ModiPick's selection moves to the fused jitted
+# path.  Re-tuned for the device-resident stages 1–3 pipeline: on this
+# host's CPU the fused jit crosses numpy between 2k and 8k requests
+# (see BENCH_policy_throughput.json); on TPU the Pallas path wins far
+# earlier, but 4096 keeps the switch conservative everywhere.
 JAX_MIN_BATCH = 4096
 
 VALID_BACKENDS = ("auto", "numpy", "jax")
@@ -66,20 +71,23 @@ def _resolve_backend(backend: Optional[str], n_batch: int) -> str:
         raise ValueError(f"unknown policy backend {backend!r}; "
                          f"valid values: {', '.join(VALID_BACKENDS)}")
     if backend == "auto":
-        # The Pallas kernel only pays off compiled: off-TPU it executes
-        # through the interpreter, which loses to numpy at every batch
-        # size (see BENCH_policy_throughput.json), so auto requires an
-        # actual TPU backend before engaging it.
-        if n_batch >= JAX_MIN_BATCH and _on_tpu():
+        # The fused device pipeline (stages 1–3 under one jit, Pallas
+        # stage 3 on TPU / plain XLA elsewhere) beats numpy above the
+        # measured crossover on CPU as well as TPU, so auto engages it
+        # wherever jax can compile — no interpret-mode Pallas is left on
+        # this path (see BENCH_policy_throughput.json).
+        if n_batch >= JAX_MIN_BATCH and _jax_available():
             return "jax"
         return "numpy"
     return backend
 
 
-def _on_tpu() -> bool:
+@functools.lru_cache(maxsize=1)
+def _jax_available() -> bool:
     try:
         import jax
-        return jax.default_backend() == "tpu"
+        jax.default_backend()
+        return True
     except Exception:  # pragma: no cover - jax is baked into the container
         return False
 
@@ -161,12 +169,25 @@ def gumbel_top1(probs: np.ndarray, rng: np.random.Generator) -> np.ndarray:
 
 def _modipick_batch(policy: ModiPick, tab: ProfileTable,
                     t_budgets: np.ndarray, rng: np.random.Generator,
-                    backend: str):
-    """Returns ``(idx, has_base, base, eligible, probs)``; ``probs`` is
-    None on the jax backend (the kernel samples without materialising
-    the probability matrix host-side)."""
+                    backend: str, need_stages: bool = True):
+    """Returns ``(idx, has_base, base, eligible, probs)``.
+
+    On the jax backend with ``need_stages=False`` the whole pipeline —
+    stages 1–2 masks, stage-3 utilities and the categorical draw — runs
+    device-resident under one jit (``kernels.policy_select.select_fused``)
+    and ``base``/``eligible``/``probs`` come back None: nothing but the
+    budget rows crosses to the device and nothing but the sampled
+    indices crosses back.  ``need_stages=True`` (detailed traces) keeps
+    the host mask path; ``probs`` is None whenever the device samples
+    without materialising the probability matrix host-side."""
     t_u = t_budgets
     t_l = t_u - policy.t_threshold
+    if backend == "jax" and not need_stages:
+        from repro.kernels import policy_select
+        idx, has_base = policy_select.select_fused(
+            tab.device_pool(), t_u, t_l, gamma=policy.gamma,
+            seed=int(rng.integers(np.iinfo(np.int64).max)))
+        return idx, has_base, None, None, None
     base, has_base, eligible, _ = modipick_masks(tab, t_u, t_l)
     probs = None
     if backend == "jax":
@@ -235,6 +256,18 @@ def select_batch(policy: Policy, store: Union[ProfileStore, ProfileTable],
     if t.ndim != 1:
         raise ValueError("t_budgets must be one-dimensional")
     backend = _resolve_backend(backend, len(t))
+    if len(t) == 1 and isinstance(store, ProfileStore):
+        # A batch of one IS a scalar selection, whatever the (already
+        # validated) backend says — backends shape batches of two or
+        # more; the Router routes singletons the same way.  ModiPick
+        # rides the lean scalar core (identical picks and RNG stream to
+        # ``select_traced``, minus the trace materialisation); stochastic
+        # policies therefore consume the scalar RNG pattern here, not
+        # the batched one — same law, different stream, exactly like the
+        # Router's singleton path.
+        if type(policy) is ModiPick:
+            return [policy.select_lean(store, float(t[0]), rng).chosen]
+        return [policy.select(store, float(t[0]), rng)]
 
     # Exact-type dispatch: a subclass may override any stage, so only
     # the classes implemented here take the batched path — everything
@@ -245,7 +278,8 @@ def select_batch(policy: Policy, store: Union[ProfileStore, ProfileTable],
     elif kind is RelatedAccurate:
         idx = _related_accurate_batch(policy, tab, t)[0]
     elif kind is ModiPick:
-        idx = _modipick_batch(policy, tab, t, rng, backend)[0]
+        idx = _modipick_batch(policy, tab, t, rng, backend,
+                              need_stages=False)[0]
     elif kind is DynamicGreedy:
         idx = _dynamic_greedy_batch(tab, t)[0]
     elif kind is StaticGreedy:
@@ -330,7 +364,7 @@ def select_batch_traced(policy: Policy,
     kind = type(policy)
     if kind is ModiPick:
         idx, has_base, base, eligible, probs = _modipick_batch(
-            policy, tab, t, rng, backend)
+            policy, tab, t, rng, backend, need_stages=detail)
         return _exploration_traces(tab, idx, has_base, base, eligible,
                                    probs, detail)
     if kind is RelatedRandom:

@@ -63,13 +63,16 @@ class ProfileTable:
     """
 
     __slots__ = ("names", "index", "accuracy", "mu", "sigma", "queue_mu",
-                 "acc_order", "fastest")
+                 "acc_order", "fastest", "_device", "_scalar")
 
     def __init__(self, names: Tuple[str, ...], accuracy: np.ndarray,
                  mu: np.ndarray, sigma: np.ndarray, queue_mu: np.ndarray,
-                 acc_order: Optional[np.ndarray] = None):
+                 acc_order: Optional[np.ndarray] = None,
+                 index: Optional[Dict[str, int]] = None):
         self.names = tuple(names)
-        self.index: Dict[str, int] = {n: i for i, n in enumerate(self.names)}
+        self.index: Dict[str, int] = (
+            index if index is not None
+            else {n: i for i, n in enumerate(self.names)})
         self.accuracy = accuracy
         self.mu = mu
         self.sigma = sigma
@@ -79,6 +82,8 @@ class ProfileTable:
         self.acc_order = (np.argsort(-accuracy, kind="stable")
                           if acc_order is None else acc_order)
         self.fastest = int(np.argmin(mu))
+        self._device = None
+        self._scalar = None
 
     @classmethod
     def from_store(cls, store: "ProfileStore") -> "ProfileTable":
@@ -95,10 +100,59 @@ class ProfileTable:
         """Table with ``mu + shifts`` (the queue-aware view: waits folded
         into the location of the latency distribution).  Accuracy — and
         therefore the cached order — is unchanged; ``queue_mu`` is zeroed
-        because the shift has consumed it."""
+        because the shift has consumed it.  The name index is shared
+        with the base table (same names, same positions)."""
         return ProfileTable(self.names, self.accuracy, self.mu + shifts,
                             self.sigma, np.zeros_like(self.queue_mu),
-                            acc_order=self.acc_order)
+                            acc_order=self.acc_order, index=self.index)
+
+    def device_pool(self):
+        """128-lane-padded device-side operands of the fused selection
+        pipeline (``kernels.policy_select.DevicePool``), built once per
+        snapshot — the freeze-time padding that keeps per-call dispatch
+        free of host-side shape work."""
+        if self._device is None:
+            from repro.kernels.policy_select import DevicePool
+            self._device = DevicePool(self.mu, self.sigma, self.accuracy,
+                                      self.acc_order, self.fastest)
+        return self._device
+
+    def refresh(self, i: int, mu: float, sigma: float,
+                queue_mu: float) -> None:
+        """In-place profile update for position ``i`` — the observe hot
+        path.  Accuracy never drifts, so ``acc_order`` is untouched;
+        ``fastest`` is re-derived, the device-side padding is dropped
+        (rebuilt lazily on the next fused selection) and the scalar-path
+        float lists are patched to match."""
+        self.mu[i] = mu
+        self.sigma[i] = sigma
+        self.queue_mu[i] = queue_mu
+        # argmin only when the write can actually move the minimum:
+        # a faster-than-fastest value, a tie that could re-rank by
+        # index, or an update of the current minimum itself.
+        if i == self.fastest or mu <= self.mu[self.fastest]:
+            self.fastest = int(np.argmin(self.mu))
+        self._device = None
+        s = self._scalar
+        if s is not None:
+            m, g = float(mu), float(sigma)
+            s[0][i] = m
+            s[1][i] = g
+            s[2][i] = m + g
+
+    def scalar_cache(self):
+        """Python-float views for the scalar selection hot path:
+        ``(mu, sigma, mu_plus_sigma, accuracy, acc_order, names)`` as
+        plain lists — element-for-element the same IEEE doubles as the
+        numpy columns (``tolist`` round-trips exactly; the ``mu+sigma``
+        list matches the elementwise array add the batched path uses)."""
+        if self._scalar is None:
+            mu = self.mu.tolist()
+            sigma = self.sigma.tolist()
+            self._scalar = (mu, sigma, (self.mu + self.sigma).tolist(),
+                            self.accuracy.tolist(),
+                            self.acc_order.tolist(), list(self.names))
+        return self._scalar
 
     def __len__(self) -> int:
         return len(self.names)
@@ -138,12 +192,28 @@ class ProfileStore:
         self._table = None
 
     def observe(self, name: str, latency_ms: float) -> None:
-        self.profiles[name].update(latency_ms, self.alpha)
-        self._table = None
+        p = self.profiles[name]
+        p.update(latency_ms, self.alpha)
+        self._refresh(name, p)
 
     def observe_queue(self, name: str, wait_ms: float) -> None:
-        self.profiles[name].update_queue(wait_ms, self.alpha)
-        self._table = None
+        p = self.profiles[name]
+        p.update_queue(wait_ms, self.alpha)
+        # Queue telemetry touches only the queue_mu column: μ/σ, the
+        # accuracy order, ``fastest`` and the device/scalar caches are
+        # all unaffected, so the patch is a single element write.
+        t = self._table
+        if t is not None:
+            t.queue_mu[t.index[name]] = p.queue_mu
+
+    def _refresh(self, name: str, p: ModelProfile) -> None:
+        """Telemetry hot path: patch the cached SoA snapshot in place
+        (same floats a full rebuild would produce — accuracy, and with
+        it the cached order, never drifts) instead of throwing the whole
+        table away per observation."""
+        if self._table is not None:
+            self._table.refresh(self._table.index[name], p.mu, p.sigma,
+                                p.queue_mu)
 
     def queue_wait(self, name: str) -> float:
         """Estimated queue wait W_queue(m) from telemetry (0 until the

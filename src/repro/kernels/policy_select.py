@@ -1,19 +1,35 @@
-"""Batched ModiPick stage-3 Pallas TPU kernel + jitted Gumbel sampling.
+"""Device-resident ModiPick selection: fused stages 1–3 under one jit.
 
-The hot step of the vectorized policy engine is the fused
-eligibility-mask / Eq. 3–4 utility / normalize pass over the
-(batch × pool) matrix.  The pool rides the 128-lane axis (padded), the
-batch is blocked on the sublane axis, and each grid step produces the
-per-request probability rows for its batch block in one VPU pass — no
-intermediate (B, n) utility matrix ever round-trips through HBM.
+Two layers live here:
 
-``sample_batch`` wraps the kernel with the Gumbel-top-1 draw
-(``argmax(log p + Gumbel)`` samples exactly from ``p``) under one jit, so
-the whole stage 3 — utilities, normalization, sampling — runs compiled.
-Off-TPU the kernel executes in interpret mode, same as every other
-kernel in this package; ``kernels.ref.policy_probs_ref`` is the pure-jnp
-oracle and ``core.policy_vec.modipick_probs`` the float64 numpy
-reference.
+- the **stage-3 Pallas TPU kernel** (``_probs_kernel`` /
+  ``modipick_probs``): the fused eligibility-mask / Eq. 3–4 utility /
+  normalize pass over the (batch × pool) matrix.  The pool rides the
+  128-lane axis (padded), the batch is blocked on the sublane axis, and
+  each grid step produces the per-request probability rows for its batch
+  block in one VPU pass — no intermediate (B, n) utility matrix ever
+  round-trips through HBM.
+- the **fused selection pipeline** (``select_fused``): stages 1–2 — the
+  Eq. 2 eligibility matrix, the accuracy-order masked argmax and the
+  window-membership mask — computed in jitted jnp on device, feeding the
+  stage-3 utilities (the Pallas kernel on TPU, the identical jnp math
+  elsewhere) and an inverse-CDF categorical draw, all under ONE jit.
+  Input is ``(mu, sigma, acc, t_u, t_l)``; output is the sampled pool
+  indices.  Nothing round-trips through the host between stages.
+
+Compiled callables are cached per ``(pool_size, gamma, batch_block)``
+(``functools.lru_cache`` over the jit closure; XLA's own cache handles
+the bucketed batch shapes), and the pool-side operands are padded to the
+128-lane axis ONCE per :class:`DevicePool` — built at ``ProfileTable``
+freeze via ``ProfileTable.device_pool()`` — instead of per call.  That
+is what turned the historical 1.9 ms batch-1 dispatch into a plain jit
+call.
+
+Sampling uses the inverse-CDF trick (one uniform per request against
+the cumulative utility row) instead of per-lane Gumbel noise: exactly
+categorical, and it draws B random numbers instead of B × 128.
+``sample_batch`` keeps the original Gumbel-top-1 kernel wrapper for
+oracle tests; ``kernels.ref`` holds the pure-jnp references.
 """
 from __future__ import annotations
 
@@ -26,6 +42,10 @@ from jax.experimental import pallas as pl
 
 EPS = 1e-9
 LANES = 128
+# Padded-lane sentinels: a fake model this slow can never be eligible,
+# and a rank this large never wins the stage-1 argmin.
+PAD_MU = 1e30
+PAD_RANK = 1e9
 
 
 def _probs_kernel(mu_ref, sig_ref, acc_ref, tu_ref, tl_ref, elig_ref,
@@ -112,3 +132,176 @@ def sample_batch(mu, sigma, acc, t_u, t_l, elig, *, gamma: float = 1.0,
                       key, gamma=gamma, block_b=block_b,
                       interpret=interpret)
     return np.asarray(idx)
+
+
+# ======================================================================
+# Device-resident stages 1–3: one jit from (mu, sigma, acc, t_u, t_l)
+# straight to sampled pool indices.
+# ======================================================================
+
+class DevicePool:
+    """Pool-side operands of the fused selection, padded to the 128-lane
+    axis once and parked on device.  Frozen against one ProfileTable
+    snapshot — rebuild (cheap) when the profiles move.
+
+    ``rank[i]`` is model ``i``'s position in the accuracy-descending
+    order (the stable argsort the scalar path caches), so the stage-1
+    "first eligible in accuracy order" is ``argmin`` of the masked rank
+    row.  Padded lanes carry ``PAD_MU``/``PAD_RANK`` sentinels, which
+    keeps every stage's math finite without a separate validity mask.
+
+    The 128-lane padding is a TPU tiling constraint (the Pallas stage-3
+    kernel rides the lane axis); the XLA-CPU path has no such
+    constraint, so off-TPU the pool keeps its natural width instead of
+    paying 16× elementwise waste on a typical 8-model zoo.
+    """
+
+    __slots__ = ("n", "npad", "mu", "sigma", "acc", "rank", "fastest")
+
+    def __init__(self, mu, sigma, acc, acc_order, fastest: int):
+        n = len(mu)
+        if jax.default_backend() == "tpu":
+            npad = max(LANES, -(-n // LANES) * LANES)
+        else:
+            npad = n
+        self.n = n
+        self.npad = npad
+
+        def pad(x, value):
+            return jnp.asarray(np.pad(np.asarray(x, np.float32),
+                                      (0, npad - n),
+                                      constant_values=value))
+
+        rank = np.empty(n, np.float32)
+        rank[np.asarray(acc_order)] = np.arange(n, dtype=np.float32)
+        self.mu = pad(mu, PAD_MU)
+        self.sigma = pad(sigma, 0.0)
+        self.acc = pad(acc, 1.0)
+        self.rank = pad(rank, PAD_RANK)
+        self.fastest = int(fastest)
+
+
+def _stages12(mu, sig, rank, t_u, t_l):
+    """Stages 1–2 on device.  mu/sig/rank: (npad,); t_u/t_l: (B,).
+    Returns ``(base, has_base, eligible)`` — the Eq. 2 eligibility matrix
+    reduced by accuracy-order masked argmin (stage 1) and the window
+    membership mask with the base forced in (stage 2)."""
+    tu, tl = t_u[:, None], t_l[:, None]
+    mus = (mu + sig)[None, :]
+    elig1 = (mus < tu) & ((mu - sig)[None, :] < tl)          # Eq. 2, (B, npad)
+    has_base = elig1.any(axis=1)
+    base = jnp.argmin(jnp.where(elig1, rank[None, :], PAD_RANK + 1.0),
+                      axis=1).astype(jnp.int32)              # first in acc order
+    half = jnp.abs(t_l - mu[base]) + sig[base]               # (B,)
+    lo, hi = (t_l - half)[:, None], (t_l + half)[:, None]
+    natural = (lo <= mu[None, :]) & (mu[None, :] <= hi) & (mus < tu)
+    eligible = natural | (jnp.arange(mu.shape[0])[None, :] == base[:, None])
+    eligible &= has_base[:, None]
+    return base, has_base, eligible
+
+
+def _utilities(mu, sig, acc, t_u, t_l, eligible, gamma):
+    """Eq. 3–4 utility rows (plain jnp, identical math to the Pallas
+    kernel); degenerate rows (non-finite or non-positive mass) fall back
+    to uniform-over-eligible, exactly like the scalar path."""
+    tu, tl = t_u[:, None], t_l[:, None]
+    num = tu - (mu + sig)[None, :]
+    den = jnp.maximum(jnp.abs(tl - mu[None, :]), EPS)
+    u = jnp.power(jnp.maximum(acc, EPS), gamma)[None, :] * num / den
+    u = jnp.where(eligible, u, 0.0)
+    total = jnp.sum(u, axis=1, keepdims=True)
+    good = jnp.isfinite(total) & (total > 0)
+    return jnp.where(good, u, eligible.astype(u.dtype))
+
+
+def _fused_select(mu, sig, acc, rank, t_u, t_l, seed, *, gamma: float,
+                  block_b: int, use_pallas: bool):
+    """The whole pipeline under one trace: stages 1–2, stage-3 utility
+    rows (Pallas kernel on TPU, jnp elsewhere), inverse-CDF categorical
+    draw.  Returns (B,) int32: the sampled pool index, or -1 where no
+    base model exists (the caller's fallback lane)."""
+    base, has_base, eligible = _stages12(mu, sig, rank, t_u, t_l)
+    if use_pallas:
+        w = modipick_probs(mu, sig, acc, t_u, t_l,
+                           eligible.astype(jnp.float32), gamma=gamma,
+                           block_b=block_b)
+    else:
+        w = _utilities(mu, sig, acc, t_u, t_l, eligible, gamma)
+    cdf = jnp.cumsum(w, axis=1)
+    total = cdf[:, -1]
+    r01 = jax.random.uniform(jax.random.PRNGKey(seed), total.shape,
+                             dtype=cdf.dtype)
+    thresh = r01 * total
+    # First index whose cumulative mass exceeds the threshold — exact
+    # categorical sampling with ONE uniform per request (no per-lane
+    # noise).  Zero-probability lanes have flat cdf segments and are
+    # never selected; the float edge thresh == total falls back to the
+    # (always eligible) base.
+    choice = jnp.argmax(cdf > thresh[:, None], axis=1).astype(jnp.int32)
+    choice = jnp.where(total > thresh, choice, base)
+    return jnp.where(has_base, choice, -1)
+
+
+@functools.lru_cache(maxsize=64)
+def _fused_jit(npad: int, gamma: float, block_b: int, use_pallas: bool):
+    """The jit cache: one compiled callable per (pool_size, gamma,
+    batch_block) — XLA's shape cache handles the bucketed batch axis."""
+    return jax.jit(functools.partial(_fused_select, gamma=gamma,
+                                     block_b=block_b,
+                                     use_pallas=use_pallas))
+
+
+@functools.lru_cache(maxsize=8)
+def _masks_jit(npad: int):
+    return jax.jit(_stages12)
+
+
+def _bucket(B: int, block_b: int) -> int:
+    """Pad the batch axis to a bounded family of shapes so jit retraces
+    stay rare: multiples of ``block_b`` up to 4096, multiples of 4096
+    beyond (≤4% padding waste at large B)."""
+    step = block_b if B <= 4096 else 4096
+    return max(block_b, -(-B // step) * step)
+
+
+def _pad_batch(x, bpad: int) -> np.ndarray:
+    out = np.zeros(bpad, np.float32)
+    out[:len(x)] = x
+    return out
+
+
+def select_fused(pool: DevicePool, t_u, t_l, *, gamma: float = 1.0,
+                 seed: int = 0, block_b: int = 256):
+    """Device-resident batched ModiPick selection.
+
+    ``t_u``/``t_l``: (B,) per-request budget bounds.  Returns
+    ``(idx, has_base)`` numpy arrays — ``idx[b]`` is the sampled pool
+    index (already routed to ``pool.fastest`` where ``~has_base``).
+    One host→device transfer (the budget rows), one device→host
+    transfer (the packed picks)."""
+    B = len(t_u)
+    bpad = _bucket(B, block_b)
+    fn = _fused_jit(pool.npad, float(gamma), block_b,
+                    jax.default_backend() == "tpu")
+    out = np.asarray(fn(pool.mu, pool.sigma, pool.acc, pool.rank,
+                        jnp.asarray(_pad_batch(t_u, bpad)),
+                        jnp.asarray(_pad_batch(t_l, bpad)),
+                        np.uint32(seed & 0xFFFFFFFF)))[:B]
+    has_base = out >= 0
+    return np.where(has_base, out, pool.fastest), has_base
+
+
+def masks_device(pool: DevicePool, t_u, t_l):
+    """Stages 1–2 alone, through the same traced code as
+    :func:`select_fused` — the test surface for pinning the device
+    masks against the ``policy_vec.modipick_masks`` numpy reference.
+    Returns numpy ``(base, has_base, eligible)`` with ``eligible``
+    trimmed to the unpadded pool."""
+    B = len(t_u)
+    bpad = _bucket(B, 8)
+    base, has, elig = _masks_jit(pool.npad)(
+        pool.mu, pool.sigma, pool.rank,
+        jnp.asarray(_pad_batch(t_u, bpad)),
+        jnp.asarray(_pad_batch(t_l, bpad)))
+    return (np.asarray(base)[:B], np.asarray(has)[:B],
+            np.asarray(elig)[:B, :pool.n])

@@ -85,6 +85,29 @@ def policy_probs_ref(mu, sigma, acc, t_u, t_l, elig, *, gamma=1.0,
     return jnp.where(good, u / jnp.where(good, total, 1.0), uniform)
 
 
+def modipick_masks_ref(mu, sigma, rank, t_u, t_l, *, pad_rank=1e9):
+    """Batched ModiPick stages 1–2 oracle (pure jnp, unpadded shapes).
+
+    mu/sigma: (n,); rank: (n,) position of each model in the
+    accuracy-descending order; t_u/t_l: (B,).  Returns
+    ``(base, has_base, eligible)``: the Eq. 2 eligibility reduced by
+    accuracy-order masked argmin (stage 1) and the window-membership
+    matrix with the base forced in (stage 2) — the ground truth for the
+    fused device pipeline in ``kernels.policy_select``."""
+    tu, tl = t_u[:, None], t_l[:, None]
+    mus = (mu + sigma)[None, :]
+    elig1 = (mus < tu) & ((mu - sigma)[None, :] < tl)
+    has_base = elig1.any(axis=1)
+    base = jnp.argmin(jnp.where(elig1, rank[None, :], pad_rank + 1.0),
+                      axis=1).astype(jnp.int32)
+    half = jnp.abs(t_l - mu[base]) + sigma[base]
+    lo, hi = (t_l - half)[:, None], (t_l + half)[:, None]
+    natural = (lo <= mu[None, :]) & (mu[None, :] <= hi) & (mus < tu)
+    eligible = natural | (jnp.arange(mu.shape[0])[None, :] == base[:, None])
+    eligible &= has_base[:, None]
+    return base, has_base, eligible
+
+
 def rglru_scan_ref(a, b):
     """Sequential linear recurrence h_t = a_t h_{t-1} + b_t. a,b: (B,S,W)."""
     af = a.astype(jnp.float32)

@@ -23,7 +23,7 @@ from typing import Optional, Tuple
 from repro.core.policy import SelectionTrace
 
 
-@dataclass
+@dataclass(slots=True)
 class InferenceRequest:
     """One inference request as the router sees it."""
     t_sla_ms: float                   # this request's SLA (end-to-end)
@@ -33,7 +33,7 @@ class InferenceRequest:
     sla_class: Optional[str] = None   # optional label, e.g. "interactive"
 
 
-@dataclass
+@dataclass(slots=True)
 class BudgetBreakdown:
     """Where the SLA went: network, queueing, and what is left for
     inference.  ``t_budget_ms`` is Eq. 1 (``T_sla − 2·T_input``);
@@ -52,7 +52,7 @@ class BudgetBreakdown:
         return self.t_budget_ms - self.w_queue_ms
 
 
-@dataclass
+@dataclass(slots=True)
 class RouterDecision:
     """The router's answer for one request."""
     request: InferenceRequest

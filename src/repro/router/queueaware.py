@@ -27,12 +27,23 @@ backwards compatibility.
 """
 from __future__ import annotations
 
-from typing import Callable, Dict
+import functools
+from typing import Callable, Dict, Optional
 
 import numpy as np
 
 from repro.core.policy import Policy, SelectionTrace, budget
-from repro.core.profiles import ModelProfile, ProfileStore
+from repro.core.profiles import ModelProfile, ProfileStore, ProfileTable
+
+
+@functools.lru_cache(maxsize=8)
+def _shared_zeros(n: int) -> np.ndarray:
+    """Read-only zeros shared by every shifted view of an ``n``-model
+    pool (a view's ``queue_mu`` is zero by construction and never
+    written)."""
+    z = np.zeros(n)
+    z.setflags(write=False)
+    return z
 
 WQueueFn = Callable[[str], float]
 
@@ -43,30 +54,101 @@ def queue_aware_budget(t_sla: float, t_input: float, w_queue: float) -> float:
     return budget(t_sla, t_input) - w_queue
 
 
-def shifted_store(store: ProfileStore, w_queue_fn: WQueueFn) -> ProfileStore:
+class _ShiftedView(ProfileStore):
+    """Lazy shifted view of a :class:`ProfileStore`.
+
+    Selection only ever touches the view's :class:`ProfileTable`
+    snapshot, so that is all the constructor builds (reusing the base
+    snapshot's cached accuracy order — a mu shift cannot reorder it).
+    The per-profile dict of shifted :class:`ModelProfile` objects is
+    materialised lazily, only if a consumer actually dereferences
+    ``view.profiles`` / ``view[name]`` — the selection hot path never
+    does, which removes the per-batch dataclass churn the eager view
+    used to pay."""
+
+    def __init__(self, store: ProfileStore, shifts: Dict[str, float]):
+        # Deliberately NOT chaining to ProfileStore.__init__: the view
+        # shares the base's configuration and builds its table directly.
+        self.alpha = store.alpha
+        self.cold_age = store.cold_age
+        self.step = store.step
+        self.base = store.base
+        self._shift_src = store
+        self._shifts = shifts
+        base = store.table()
+        # Shifted snapshot assembled directly (same fields
+        # ``ProfileTable.shifted`` would produce, same IEEE doubles —
+        # python float adds match the elementwise array add): accuracy,
+        # sigma, the cached order and the name index are shared with the
+        # base exactly as before; μ is new; queue_mu is zero because the
+        # shift has consumed it.
+        b_mu, b_sig, _, b_acc, b_ord, b_names = base.scalar_cache()
+        mu_l = [m + shifts[n] for m, n in zip(b_mu, b_names)]
+        fastest = 0
+        best = mu_l[0]
+        for i in range(1, len(mu_l)):
+            if mu_l[i] < best:
+                best = mu_l[i]
+                fastest = i
+        tab = ProfileTable.__new__(ProfileTable)
+        tab.names = base.names
+        tab.index = base.index
+        tab.accuracy = base.accuracy
+        tab.mu = np.asarray(mu_l)
+        tab.sigma = base.sigma
+        tab.queue_mu = _shared_zeros(len(mu_l))
+        tab.acc_order = base.acc_order
+        tab.fastest = fastest
+        tab._device = None
+        # Scalar-path cache derived from the base's by the same float
+        # adds; sigma is copied (the base list is patched in place by
+        # telemetry), accuracy/order/names can't drift and are shared.
+        sig_l = b_sig[:]
+        tab._scalar = (mu_l, sig_l,
+                       [m + g for m, g in zip(mu_l, sig_l)],
+                       b_acc, b_ord, b_names)
+        self._table = tab
+        self._profiles: Dict[str, ModelProfile] = None
+
+    @property
+    def profiles(self) -> Dict[str, ModelProfile]:
+        if self._profiles is None:
+            self._profiles = {
+                p.name: ModelProfile(name=p.name, accuracy=p.accuracy,
+                                     mu=p.mu + self._shifts[p.name],
+                                     var=p.var, n_obs=p.n_obs,
+                                     last_selected=p.last_selected)
+                for p in self._shift_src.profiles.values()}
+        return self._profiles
+
+    def _refresh(self, name: str, p: ModelProfile) -> None:
+        # Observing on a view must stay view-local (the historical copy
+        # semantics): the prebuilt snapshot shares the BASE table's
+        # sigma array and a read-only zeros queue_mu, so instead of
+        # patching in place, drop it — the next ``table()`` rebuilds
+        # from the view's own (lazily copied) profiles.
+        self._table = None
+
+
+def shifted_store(store: ProfileStore, w_queue_fn: WQueueFn, *,
+                  shifts: Optional[Dict[str, float]] = None) -> ProfileStore:
     """View of ``store`` with each model's mean shifted by its estimated
     queue wait.  Returns ``store`` itself when every shift is zero, so
     the zero-load path is bit-identical to plain selection.
 
     The view's ``ProfileTable`` is derived from the base store's cached
     snapshot: a mu shift cannot change the accuracy order, so the view
-    reuses it instead of re-sorting the pool on every selection."""
-    shifts: Dict[str, float] = {n: max(0.0, float(w_queue_fn(n)))
-                                for n in store.profiles}
+    reuses it instead of re-sorting the pool on every selection.
+
+    ``shifts`` (optional) hands over an already-clamped name -> wait
+    snapshot — the Router builds exactly one per batch — so the view
+    does not re-query ``w_queue_fn`` per model."""
+    if shifts is None:
+        shifts = {n: max(0.0, float(w_queue_fn(n)))
+                  for n in store.profiles}
     if not any(shifts.values()):
         return store
-    view = ProfileStore(
-        [ModelProfile(name=p.name, accuracy=p.accuracy,
-                      mu=p.mu + shifts[p.name], var=p.var, n_obs=p.n_obs,
-                      last_selected=p.last_selected)
-         for p in store.profiles.values()],
-        alpha=store.alpha, cold_age=store.cold_age)
-    view.step = store.step
-    view.base = store.base
-    base = store.table()
-    view._table = base.shifted(
-        np.array([shifts[n] for n in base.names]))
-    return view
+    return _ShiftedView(store, shifts)
 
 
 class QueueAwareSelector:

@@ -58,6 +58,11 @@ class Router:
         self.store = store
         self.policy = policy
         self.admission = admission if admission is not None else AdmitAll()
+        # Controllers that never overrode the base no-op verdict can be
+        # skipped wholesale on the batch hot path (method identity, so
+        # any subclass with a real ``admit`` is detected automatically).
+        self._admits_all = (type(self.admission).admit
+                            is AdmissionController.admit)
         self.queue_aware = queue_aware
         self.backend = backend
         # False: batched decisions carry chosen + fallback only (no
@@ -84,59 +89,80 @@ class Router:
     def route_batch(self, requests: Sequence[InferenceRequest],
                     rng: np.random.Generator, *,
                     w_queue_fn: Optional[WQueueFn] = None,
-                    depth_fn: Optional[DepthFn] = None
+                    depth_fn: Optional[DepthFn] = None,
+                    w_queue_map: Optional[Dict[str, float]] = None
                     ) -> List[RouterDecision]:
         """Route a batch of requests against one telemetry snapshot.
 
         ``w_queue_fn`` maps a model name to its estimated queue wait
         (ms) *now*; when omitted in queue-aware mode the store's own
-        EWMA queue telemetry is used.  All requests in the batch see the
-        same snapshot — the engine's speculative-lookahead contract.
+        EWMA queue telemetry is used.  ``w_queue_map`` hands over the
+        whole snapshot at once — a complete name -> wait mapping of
+        clamped non-negative floats (the engine computes each replica's
+        wait exactly once per batch and passes it here, skipping the
+        per-model query round).  All requests in the batch see the same
+        snapshot — the engine's speculative-lookahead contract.
         """
         reqs = list(requests)
         if not reqs:
             return []
-        budgets = np.array([budget(r.t_sla_ms, r.t_input_ms) for r in reqs])
+        if len(reqs) == 1:
+            # Singleton hot path: one scalar budget, no array churn.
+            budgets = (budget(reqs[0].t_sla_ms, reqs[0].t_input_ms),)
+        else:
+            budgets = np.array([budget(r.t_sla_ms, r.t_input_ms)
+                                for r in reqs])
 
         needs_waits = self.queue_aware or self.admission.needs_w_queue
-        if w_queue_fn is None and needs_waits:
-            # No injected estimator: fall back to the store's own EWMA
-            # queue telemetry (0 until the first observation), for
-            # queue-aware selection and admission alike.
-            w_queue_fn = self.store.queue_wait
         waits: Optional[Dict[str, float]] = None
-        if w_queue_fn is not None and needs_waits:
-            waits = {n: max(0.0, float(w_queue_fn(n)))
-                     for n in self.store.profiles}
+        if needs_waits:
+            if w_queue_map is not None:
+                waits = w_queue_map
+            else:
+                # No injected snapshot: query per model, falling back to
+                # the store's own EWMA queue telemetry (0 until the
+                # first observation) absent an estimator.
+                fn = w_queue_fn or self.store.queue_wait
+                waits = {n: max(0.0, float(fn(n)))
+                         for n in self.store.profiles}
         w_fn = waits.__getitem__ if waits is not None else None
 
         tab = self.store.table()
         decisions: List[Optional[RouterDecision]] = [None] * len(reqs)
-        admitted: List[int] = []
-        for i, req in enumerate(reqs):
-            ok, reason = self.admission.admit(req, float(budgets[i]), tab,
-                                              w_fn, depth_fn)
-            if ok:
-                admitted.append(i)
-            else:
-                decisions[i] = RouterDecision(
-                    request=req, variant="", admitted=False,
-                    reject_reason=reason,
-                    budget=BudgetBreakdown(
-                        t_sla_ms=req.t_sla_ms,
-                        t_network_ms=2.0 * req.t_input_ms,
-                        w_queue_ms=min(waits.values()) if waits else 0.0))
+        if self._admits_all:
+            # The base no-op verdict: skip the per-request call.
+            admitted = list(range(len(reqs)))
+        else:
+            admitted = []
+            for i, req in enumerate(reqs):
+                ok, reason = self.admission.admit(req, float(budgets[i]),
+                                                  tab, w_fn, depth_fn)
+                if ok:
+                    admitted.append(i)
+                else:
+                    decisions[i] = RouterDecision(
+                        request=req, variant="", admitted=False,
+                        reject_reason=reason,
+                        budget=BudgetBreakdown(
+                            t_sla_ms=req.t_sla_ms,
+                            t_network_ms=2.0 * req.t_input_ms,
+                            w_queue_ms=min(waits.values()) if waits else 0.0))
 
         if admitted:
-            sel_store = (shifted_store(self.store, w_fn)
+            # ``waits`` is already the clamped per-batch snapshot, so
+            # the shifted view reuses it instead of re-querying.
+            sel_store = (shifted_store(self.store, w_fn, shifts=waits)
                          if (self.queue_aware and w_fn is not None)
                          else self.store)
             if len(admitted) == 1:
                 # Scalar path: draw-for-draw identical to a historical
-                # per-request ``select_traced`` call site.
+                # per-request ``select_traced`` call site.  Without
+                # trace detail the lean core skips the eligible/probs
+                # tuple materialisation — same stages, same RNG stream.
                 i = admitted[0]
-                traces = [self.policy.select_traced(
-                    sel_store, float(budgets[i]), rng)]
+                select = (self.policy.select_traced if self.trace_detail
+                          else self.policy.select_lean)
+                traces = [select(sel_store, float(budgets[i]), rng)]
             else:
                 traces = policy_vec.select_batch_traced(
                     self.policy, sel_store, budgets[admitted], rng,

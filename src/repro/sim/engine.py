@@ -10,16 +10,28 @@ At ENQUEUE the engine hands the request to the unified
 selection all live there.  Consecutive same-timestamp ENQUEUE events
 (plus an optional ``batch_window_ms`` speculative lookahead) are grouped
 into ONE ``route_batch`` call, so the event loop rides the vectorized
-policy path; a singleton batch takes the scalar ``select_traced`` route,
-which is draw-for-draw identical to the historical per-request call —
-seeded runs with continuous (never-colliding) event times are
-bit-identical to the pre-router engine.  Queue-aware mode presents the
-policy with per-model budgets ``T_sla - 2*T_input - W_queue(m)`` via the
-router's shifted store view.  The admitted request joins the FIFO of the
+policy path; a singleton batch takes the scalar selection route, which
+is draw-for-draw identical to the historical per-request call — seeded
+runs with continuous (never-colliding) event times are bit-identical to
+the pre-router engine.  Queue-aware mode presents the policy with
+per-model budgets ``T_sla - 2*T_input - W_queue(m)`` via the router's
+shifted store view.  The admitted request joins the FIFO of the
 least-loaded capable replica, and — exactly like the live serving path —
 the profile store receives the *inference* latency at FINISH and the
 observed queue wait at service start (telemetry mirroring
 ``serving/batcher.py``).
+
+Hot-path representation (the million-request regime): per-request state
+lives in preallocated structure-of-arrays columns indexed by request id
+— no per-request dataclass is ever constructed inside the event loop.
+Replica FIFOs hold request indices (``sim/replica.py`` bound mode), the
+per-batch ``W_queue`` snapshot computes each replica's wait once, and
+per-request SLA/class assignments are materialized into columns up
+front (they never touch the RNG, so labelled runs stay draw-for-draw
+identical).  ``completed_requests``/``rejected_requests`` materialize
+:class:`SimRequest` views lazily from the columns for inspection;
+``_summarise`` and the per-class slices are vectorized reductions over
+the same columns.
 
 Per-request SLAs are first-class: ``run(..., sla_for=...)`` assigns each
 request its own ``t_sla_ms`` (heterogeneous mixes become one more column
@@ -75,6 +87,33 @@ class SimRequest:
         # + inference + downlink.  Bit-identical to the legacy closed
         # loop's ``2*T_input + T_inf`` at zero queue wait.
         return 2.0 * self.t_input_ms + self.queue_wait_ms + self.service_ms
+
+
+class _Columns:
+    """Preallocated SoA record arrays for one run's request state.
+    Index == request id; every field of the historical ``SimRequest``
+    dataclass is one contiguous column."""
+
+    __slots__ = ("arrival", "t_input", "t_sla", "enqueue", "sstart",
+                 "service", "finish", "depart", "model", "replica",
+                 "cls", "fallback", "rejected", "reason")
+
+    def __init__(self, n: int):
+        z = lambda dt: np.zeros(n, dtype=dt)
+        self.arrival = z(np.float64)
+        self.t_input = z(np.float64)
+        self.t_sla = z(np.float64)
+        self.enqueue = z(np.float64)
+        self.sstart = z(np.float64)
+        self.service = z(np.float64)
+        self.finish = z(np.float64)
+        self.depart = z(np.float64)
+        self.model = np.full(n, -1, dtype=np.int32)     # model id, -1 = none
+        self.replica = np.full(n, -1, dtype=np.int32)   # pool index
+        self.cls = z(np.int32)                          # class-label code
+        self.fallback = z(bool)
+        self.rejected = z(bool)
+        self.reason = z(np.int16)                       # reject-reason code
 
 
 @dataclass
@@ -140,6 +179,16 @@ class ServingSimulator:
         # continuous event times bit-identical to per-request routing.
         self.batch_window_ms = batch_window_ms
         self.router: Optional[Router] = None  # built per run()
+        # Post-run SoA state (lazy SimRequest materialization).
+        self._cols: Optional[_Columns] = None
+        self._completed_rids: List[int] = []
+        self._rejected_rids: List[int] = []
+        self._model_names: List[str] = []
+        self._replica_names: List[str] = []
+        self._class_labels: List[str] = [""]
+        self._reasons: List[str] = [""]
+        self._completed_objs: Optional[List[SimRequest]] = None
+        self._rejected_objs: Optional[List[SimRequest]] = None
 
     @classmethod
     def from_scenario(cls, scenario, *,
@@ -164,9 +213,11 @@ class ServingSimulator:
         default for requests without an override.  ``class_for(rid)``
         (optional) labels each request with an SLA class — the label
         rides ``InferenceRequest.sla_class`` into class-aware admission
-        and slices the summary's ``per_class`` rows; it never touches
-        the RNG, so labelled runs stay draw-for-draw identical to
-        unlabelled ones under the same seed."""
+        and slices the summary's ``per_class`` rows.  Both are
+        materialized into SoA columns before the event loop starts
+        (batched, in rid order); they never touch the RNG, so labelled
+        runs stay draw-for-draw identical to unlabelled ones under the
+        same seed."""
         arrivals = arrivals or ClosedLoopArrivals()
         rng = np.random.default_rng(self.seed)
         store = store or make_store(self.entries, alpha=self.alpha,
@@ -175,52 +226,110 @@ class ServingSimulator:
         svc = GaussianServiceModel(truth, spike_prob=self.spike_prob,
                                    spike_mult=self.spike_mult)
         # trace_detail=False: the event loop consumes only variant +
-        # fallback, so batched decisions skip stage-tuple materialization.
+        # fallback, so decisions skip stage-tuple materialization.
         router = Router(store, policy, admission=self.admission,
                         queue_aware=self.queue_aware, backend=self.backend,
                         trace_detail=False)
         self.router = router
         self.pool.reset()
 
+        n = n_requests
+        names = list(truth)
+        model_ids = {nm: i for i, nm in enumerate(names)}
+        profiles = [store.profiles[nm] for nm in names]
+        cols = _Columns(n)
+        # Batched SLA/class materialization (RNG-free, rid order).
+        if sla_for is None:
+            cols.t_sla.fill(t_sla)
+        else:
+            cols.t_sla[:] = [float(sla_for(i)) for i in range(n)]
+        labels: List[str] = [""]
+        if class_for is not None:
+            code_of: Dict[str, int] = {"": 0}
+            cls_col = cols.cls
+            for i in range(n):
+                lab = str(class_for(i))
+                code = code_of.get(lab)
+                if code is None:
+                    code = code_of[lab] = len(labels)
+                    labels.append(lab)
+                cls_col[i] = code
+        class_names = [lab if lab else None for lab in labels]
+
+        # Replica binding: int queues + live per-model μ for the O(1)
+        # wait estimates (the index-based free-list replacing the
+        # per-event object walks).
+        mu_now: List[float] = [p.mu for p in profiles]
+        self.pool.bind(names, cols.model, mu_now)
+        replica_index = {id(r): i for i, r in enumerate(self.pool.replicas)}
+
+        reasons: List[str] = [""]
+        reason_code: Dict[str, int] = {"": 0}
+
         evq = EventQueue()
-        completed: List[SimRequest] = []
-        rejected: List[SimRequest] = []
+        completed: List[int] = []
+        rejected: List[int] = []
         n_issued = 0
-        if n_requests > 0:
+        if n > 0:
             evq.push(arrivals.first(rng), ARRIVAL, 0)
             n_issued = 1
 
+        arrival_c, t_input_c, t_sla_c = cols.arrival, cols.t_input, cols.t_sla
+        enq_c, sstart_c, service_c = cols.enqueue, cols.sstart, cols.service
+        finish_c, depart_c = cols.finish, cols.depart
+        model_c, replica_c, cls_c = cols.model, cols.replica, cols.cls
+        fallback_c, rejected_c, reason_c = cols.fallback, cols.rejected, \
+            cols.reason
+        closed_loop = arrivals.closed_loop
+        needs_waits = router.queue_aware or router.admission.needs_w_queue
+
         def start_service(replica: Replica, now: float) -> None:
-            req: SimRequest = replica.queue.popleft()
+            rid = replica.pop_request()
             # A speculatively-routed request (lookahead batching) may be
             # popped before its uplink completes; service cannot start
             # before the input is on the server.  No-op without lookahead.
-            now = max(now, req.enqueue_ms)
-            req.service_start_ms = now
-            store.observe_queue(req.model, req.queue_wait_ms)
-            req.service_ms = svc.sample(rng, req.model, replica.speed)
-            replica.current = req
-            replica.busy_until = now + req.service_ms
-            evq.push(now + req.service_ms, FINISH, (replica, req))
+            t_enq = enq_c[rid]
+            if now < t_enq:
+                now = t_enq
+            sstart_c[rid] = now
+            mid = model_c[rid]
+            store.observe_queue(names[mid], now - t_enq)
+            t_inf = svc.sample(rng, names[mid], replica.speed)
+            service_c[rid] = t_inf
+            replica.current = rid
+            replica.busy_until = now + t_inf
+            evq.push(now + t_inf, FINISH, (replica, rid))
 
         def issue_next_closed_loop(now: float) -> None:
             nonlocal n_issued
-            if arrivals.closed_loop and n_issued < n_requests:
+            if closed_loop and n_issued < n:
                 evq.push(arrivals.next_after(rng, now, n_issued),
                          ARRIVAL, n_issued)
                 n_issued += 1
+
+        def reject(rid: int, reason: str, depart_ms: float,
+                   now: float) -> None:
+            rejected_c[rid] = True
+            code = reason_code.get(reason)
+            if code is None:
+                code = reason_code[reason] = len(reasons)
+                reasons.append(reason)
+            reason_c[rid] = code
+            depart_c[rid] = depart_ms
+            rejected.append(rid)
+            issue_next_closed_loop(now)
 
         while evq:
             ev = evq.pop()
             now = ev.time
 
             if ev.kind == ARRIVAL:
-                req = SimRequest(rid=ev.data, arrival_ms=now)
-                req.t_sla_ms = float(sla_for(ev.data)) if sla_for else t_sla
-                req.sla_class = str(class_for(ev.data)) if class_for else ""
-                req.t_input_ms = float(self.network.sample(rng, 1)[0])
-                evq.push(now + req.t_input_ms, ENQUEUE, req)
-                if not arrivals.closed_loop and n_issued < n_requests:
+                rid = ev.data
+                arrival_c[rid] = now
+                t_in = float(self.network.sample_one(rng))
+                t_input_c[rid] = t_in
+                evq.push(now + t_in, ENQUEUE, rid)
+                if not closed_loop and n_issued < n:
                     t_next = arrivals.next_after(rng, now, n_issued)
                     if t_next is not None:
                         evq.push(t_next, ARRIVAL, n_issued)
@@ -229,62 +338,65 @@ class ServingSimulator:
             elif ev.kind == ENQUEUE:
                 # Group consecutive ENQUEUEs inside the batching window
                 # into ONE route_batch call (vectorized selection).
-                ev.data.enqueue_ms = now
-                batch: List[SimRequest] = [ev.data]
+                rid = ev.data
+                enq_c[rid] = now
+                batch: List[int] = [rid]
                 limit = now + self.batch_window_ms
                 while evq:
                     head = evq.peek()
                     if head.kind != ENQUEUE or head.time > limit:
                         break
                     nxt = evq.pop()
-                    nxt.data.enqueue_ms = nxt.time
+                    enq_c[nxt.data] = nxt.time
                     batch.append(nxt.data)
+                # One W_queue snapshot per batch: every replica's wait
+                # computed exactly once, handed to the router whole.
+                waits = (self.pool.waits_by_name(now, store)
+                         if needs_waits else None)
                 decisions = router.route_batch(
-                    [InferenceRequest(rid=r.rid, arrival_ms=r.arrival_ms,
-                                      t_sla_ms=r.t_sla_ms,
-                                      t_input_ms=r.t_input_ms,
-                                      sla_class=r.sla_class or None)
+                    [InferenceRequest(rid=r, arrival_ms=arrival_c[r],
+                                      t_sla_ms=t_sla_c[r],
+                                      t_input_ms=t_input_c[r],
+                                      sla_class=class_names[cls_c[r]])
                      for r in batch],
                     rng,
-                    w_queue_fn=lambda m: self.pool.queue_wait(m, now, store),
+                    w_queue_map=waits,
                     depth_fn=lambda m: min(r.depth() for r in
                                            self.pool.candidates(m)))
-                for req, dec in zip(batch, decisions):
+                for rid, dec in zip(batch, decisions):
                     if not dec.admitted:
                         # Router-side shed: no selection spent, no
                         # replica touched.
-                        req.rejected = True
-                        req.reject_reason = dec.reject_reason
-                        req.depart_ms = req.enqueue_ms
-                        rejected.append(req)
-                        issue_next_closed_loop(now)
+                        reject(rid, dec.reject_reason, enq_c[rid], now)
                         continue
-                    req.model = dec.variant
-                    req.fallback = dec.fallback
-                    replica = self.pool.best_for(req.model, now, store)
-                    req.replica = replica.name
+                    mid = model_ids[dec.variant]
+                    model_c[rid] = mid
+                    fallback_c[rid] = dec.fallback
+                    replica = self.pool.best_for(dec.variant, now, store)
+                    replica_c[rid] = replica_index[id(replica)]
                     if replica.full():
-                        req.rejected = True
-                        req.reject_reason = "replica queue full"
                         # == now without lookahead; a speculatively-routed
                         # request cannot depart before its own enqueue.
-                        req.depart_ms = max(now, req.enqueue_ms)
-                        rejected.append(req)
-                        issue_next_closed_loop(now)
+                        reject(rid, "replica queue full",
+                               max(now, enq_c[rid]), now)
                         continue
-                    replica.queue.append(req)
-                    replica.peak_depth = max(replica.peak_depth,
-                                             replica.depth())
+                    replica.enqueue(rid, mid)
+                    depth = replica.depth()
+                    if depth > replica.peak_depth:
+                        replica.peak_depth = depth
                     if replica.current is None:
                         start_service(replica, now)
 
             elif ev.kind == FINISH:
-                replica, req = ev.data
-                req.finish_ms = now
+                replica, rid = ev.data
+                finish_c[rid] = now
                 replica.current = None
                 replica.n_served += 1
-                replica.busy_ms += req.service_ms
-                store.observe(req.model, req.service_ms)
+                t_inf = float(service_c[rid])
+                replica.busy_ms += t_inf
+                mid = model_c[rid]
+                store.observe(names[mid], t_inf)
+                mu_now[mid] = profiles[mid].mu
                 # Cold-model refresh (§3.3): probe one stale model
                 # out-of-band, as in the original closed loop.
                 if self.cold_probe:
@@ -292,38 +404,118 @@ class ServingSimulator:
                     if cold:
                         probe = cold[int(rng.integers(len(cold)))]
                         store.observe(probe, svc.sample(rng, probe))
+                        mu_now[model_ids[probe]] = store.profiles[probe].mu
                         store.profiles[probe].last_selected = store.step
-                evq.push(now + req.t_input_ms, DEPART, req)
+                evq.push(now + t_input_c[rid], DEPART, rid)
                 if replica.queue:
                     start_service(replica, now)
 
             elif ev.kind == DEPART:
-                req = ev.data
-                req.depart_ms = now
-                completed.append(req)
-                if arrivals.closed_loop and n_issued < n_requests:
+                rid = ev.data
+                depart_c[rid] = now
+                completed.append(rid)
+                if closed_loop and n_issued < n:
                     evq.push(arrivals.next_after(rng, now, n_issued),
                              ARRIVAL, n_issued)
                     n_issued += 1
 
         # Per-run request records stay inspectable (per-SLA-class slicing
-        # in tests and frontier studies reads them after run()).
-        self.completed_requests = completed
-        self.rejected_requests = rejected
-        return self._summarise(router.name, t_sla, truth, completed, rejected)
+        # in tests and frontier studies reads them after run()) —
+        # materialized lazily from the columns on first access.
+        self._cols = cols
+        self._completed_rids = completed
+        self._rejected_rids = rejected
+        self._model_names = names
+        self._replica_names = [r.name for r in self.pool.replicas]
+        self._class_labels = labels
+        self._reasons = reasons
+        self._completed_objs = None
+        self._rejected_objs = None
+        return self._summarise_cols(router.name, t_sla, truth, cols,
+                                    completed, rejected, labels)
 
     # ------------------------------------------------------------------
-    # SoA record-array summary: one pass packs the per-request fields
-    # into contiguous columns; every statistic below is a vectorized
-    # reduction instead of a Python list comprehension per metric.
-    _REQ_DTYPE = np.dtype([("t_input", "f8"), ("wait", "f8"),
-                           ("service", "f8"), ("arrival", "f8"),
-                           ("depart", "f8"), ("t_sla", "f8"),
-                           ("model", "i4")])
+    # lazy SimRequest materialization from the SoA columns
+    # ------------------------------------------------------------------
+    def _make_request(self, rid: int) -> SimRequest:
+        c = self._cols
+        mid = int(c.model[rid])
+        rep = int(c.replica[rid])
+        return SimRequest(
+            rid=rid,
+            arrival_ms=float(c.arrival[rid]),
+            t_input_ms=float(c.t_input[rid]),
+            t_sla_ms=float(c.t_sla[rid]),
+            sla_class=self._class_labels[int(c.cls[rid])],
+            model=self._model_names[mid] if mid >= 0 else "",
+            replica=self._replica_names[rep] if rep >= 0 else "",
+            fallback=bool(c.fallback[rid]),
+            rejected=bool(c.rejected[rid]),
+            reject_reason=self._reasons[int(c.reason[rid])],
+            enqueue_ms=float(c.enqueue[rid]),
+            service_start_ms=float(c.sstart[rid]),
+            service_ms=float(c.service[rid]),
+            finish_ms=float(c.finish[rid]),
+            depart_ms=float(c.depart[rid]))
 
+    @property
+    def completed_requests(self) -> List[SimRequest]:
+        if self._completed_objs is None:
+            self._completed_objs = [self._make_request(r)
+                                    for r in self._completed_rids]
+        return self._completed_objs
+
+    @property
+    def rejected_requests(self) -> List[SimRequest]:
+        if self._rejected_objs is None:
+            self._rejected_objs = [self._make_request(r)
+                                   for r in self._rejected_rids]
+        return self._rejected_objs
+
+    # ------------------------------------------------------------------
+    # SoA summary: every statistic is a vectorized reduction over the
+    # request columns (sliced in completion order, matching the
+    # historical per-object iteration element for element).
+    # ------------------------------------------------------------------
     def _summarise(self, policy_name, t_sla, truth, completed, rejected
                    ) -> LoadSimResult:
+        """Back-compat entry point over ``SimRequest`` object lists
+        (tests and external harnesses call it directly): packs the
+        objects into columns and defers to the vectorized summary."""
+        objs = list(completed) + list(rejected)
+        cols = _Columns(len(objs))
+        model_ids = {name: i for i, name in enumerate(truth)}
+        labels: List[str] = [""]
+        code_of = {"": 0}
+        for i, r in enumerate(objs):
+            cols.arrival[i] = r.arrival_ms
+            cols.t_input[i] = r.t_input_ms
+            cols.t_sla[i] = r.t_sla_ms
+            cols.enqueue[i] = r.enqueue_ms
+            cols.sstart[i] = r.service_start_ms
+            cols.service[i] = r.service_ms
+            cols.finish[i] = r.finish_ms
+            cols.depart[i] = r.depart_ms
+            cols.model[i] = model_ids.get(r.model, -1)
+            cols.rejected[i] = r.rejected
+            code = code_of.get(r.sla_class)
+            if code is None:
+                code = code_of[r.sla_class] = len(labels)
+                labels.append(r.sla_class)
+            cols.cls[i] = code
+        return self._summarise_cols(policy_name, t_sla, truth, cols,
+                                    list(range(len(completed))),
+                                    list(range(len(completed), len(objs))),
+                                    labels)
+
+    def _summarise_cols(self, policy_name, t_sla, truth, cols: _Columns,
+                        completed: List[int], rejected: List[int],
+                        labels: List[str]) -> LoadSimResult:
         n_arrived = len(completed) + len(rejected)
+        acc_of = {name: e.top1 / 100.0 for name, e in truth.items()}
+        rj = np.asarray(rejected, dtype=np.int64)
+        per_class = self._per_class_cols(cols, completed, rejected, labels,
+                                         truth, acc_of)
         if not completed:
             return LoadSimResult(
                 policy=policy_name, t_sla=t_sla,
@@ -331,77 +523,91 @@ class ServingSimulator:
                 sla_attainment=0.0, mean_accuracy=0.0, mean_latency=0.0,
                 p50_latency=0.0, p99_latency=0.0, mean_queue_wait=0.0,
                 p99_queue_wait=0.0, peak_queue_depth=0, model_usage={},
-                replica_utilization={},
-                per_class=self._per_class(completed, rejected, {}))
+                replica_utilization={}, per_class=per_class)
         model_ids = {name: i for i, name in enumerate(truth)}
-        rec = np.fromiter(
-            ((r.t_input_ms, r.queue_wait_ms, r.service_ms, r.arrival_ms,
-              r.depart_ms, r.t_sla_ms, model_ids[r.model])
-             for r in completed),
-            dtype=self._REQ_DTYPE, count=len(completed))
+        ci = np.asarray(completed, dtype=np.int64)
+        t_input = cols.t_input[ci]
+        wait = cols.sstart[ci] - cols.enqueue[ci]
+        service = cols.service[ci]
+        model = cols.model[ci]
         # Component sum, identical to SimRequest.e2e_ms per element.
-        e2e = 2.0 * rec["t_input"] + rec["wait"] + rec["service"]
+        e2e = 2.0 * t_input + wait + service
         # Scored against each request's own SLA (identical to the scalar
         # comparison when every request carries the run-level t_sla).
-        met = int((e2e <= rec["t_sla"]).sum())
+        met = int((e2e <= cols.t_sla[ci]).sum())
         acc_by_id = np.array([e.top1 / 100.0 for e in truth.values()])
-        counts = np.bincount(rec["model"], minlength=len(model_ids))
+        counts = np.bincount(model, minlength=len(model_ids))
         usage = {name: int(counts[i]) for name, i in model_ids.items()
                  if counts[i]}
         # Horizon spans *every* request the pool saw — rejected ones
         # included, so utilization is not inflated under heavy shedding
         # (a shed request still occupies wall-clock on the timeline).
-        first = float(rec["arrival"].min())
-        last = float(rec["depart"].max())
-        if rejected:
-            first = min(first, min(r.arrival_ms for r in rejected))
-            last = max(last, max(r.depart_ms for r in rejected))
+        first = float(cols.arrival[ci].min())
+        last = float(cols.depart[ci].max())
+        if len(rj):
+            first = min(first, float(cols.arrival[rj].min()))
+            last = max(last, float(cols.depart[rj].max()))
         horizon = max(last - first, 1e-9)
         return LoadSimResult(
             policy=policy_name, t_sla=t_sla,
             n_arrived=n_arrived, n_completed=len(completed),
             n_rejected=len(rejected),
             sla_attainment=met / max(n_arrived, 1),
-            mean_accuracy=float(np.mean(acc_by_id[rec["model"]])),
+            mean_accuracy=float(np.mean(acc_by_id[model])),
             mean_latency=float(e2e.mean()),
             p50_latency=float(np.percentile(e2e, 50)),
             p99_latency=float(np.percentile(e2e, 99)),
-            mean_queue_wait=float(rec["wait"].mean()),
-            p99_queue_wait=float(np.percentile(rec["wait"], 99)),
+            mean_queue_wait=float(wait.mean()),
+            p99_queue_wait=float(np.percentile(wait, 99)),
             peak_queue_depth=max(r.peak_depth for r in self.pool.replicas),
             model_usage={k: v / len(completed)
                          for k, v in sorted(usage.items())},
             replica_utilization={r.name: r.busy_ms / horizon
                                  for r in self.pool.replicas},
             horizon_ms=horizon,
-            per_class=self._per_class(
-                completed, rejected,
-                {name: e.top1 / 100.0 for name, e in truth.items()}))
+            per_class=per_class)
 
     @staticmethod
-    def _per_class(completed, rejected, acc_of) -> Dict[str, Dict[str, float]]:
-        """Class-sliced attainment/accuracy/shed rows; {} when no request
-        carried a class label (the common single-class run)."""
-        if not any(r.sla_class for r in completed) and \
-                not any(r.sla_class for r in rejected):
+    def _per_class_cols(cols: _Columns, completed: List[int],
+                        rejected: List[int], labels: List[str],
+                        truth, acc_of) -> Dict[str, Dict[str, float]]:
+        """Class-sliced attainment/accuracy/shed rows, vectorized over
+        the record columns; {} when no request carried a class label
+        (the common single-class run)."""
+        ci = np.asarray(completed, dtype=np.int64)
+        rj = np.asarray(rejected, dtype=np.int64)
+        cc = cols.cls[ci] if len(ci) else np.empty(0, np.int32)
+        rc = cols.cls[rj] if len(rj) else np.empty(0, np.int32)
+        seen = set(np.unique(cc)) | set(np.unique(rc))
+        seen = {int(c) for c in seen if labels[int(c)]}
+        if not seen:
             return {}
+        acc_by_id = np.array([acc_of[name] for name in truth])
+        t_input = cols.t_input[ci]
+        wait = cols.sstart[ci] - cols.enqueue[ci]
+        e2e = 2.0 * t_input + wait + cols.service[ci]
+        met_mask = e2e <= cols.t_sla[ci]
         out: Dict[str, Dict[str, float]] = {}
-        classes = sorted({r.sla_class for r in completed}
-                         | {r.sla_class for r in rejected})
-        for cls in classes:
-            done = [r for r in completed if r.sla_class == cls]
-            shed = [r for r in rejected if r.sla_class == cls]
-            n = len(done) + len(shed)
-            met = sum(r.e2e_ms <= r.t_sla_ms for r in done)
-            out[cls or "default"] = {
-                "n_arrived": n,
-                "n_rejected": len(shed),
-                "shed_rate": len(shed) / max(n, 1),
-                "attainment": met / max(n, 1),
-                "accuracy": (float(np.mean([acc_of[r.model] for r in done]))
-                             if done else 0.0),
-                "mean_latency": (float(np.mean([r.e2e_ms for r in done]))
-                                 if done else 0.0),
+        # All arrived requests carry a code (unlabelled == code 0 == "");
+        # classes are reported in sorted label order, like the legacy
+        # per-object slicing.
+        present = sorted({labels[int(c)] for c in
+                          set(np.unique(cc)) | set(np.unique(rc))})
+        for lab in present:
+            code = labels.index(lab)
+            dmask = cc == code
+            n_done = int(dmask.sum())
+            n_shed = int((rc == code).sum())
+            n_cls = n_done + n_shed
+            out[lab or "default"] = {
+                "n_arrived": n_cls,
+                "n_rejected": n_shed,
+                "shed_rate": n_shed / max(n_cls, 1),
+                "attainment": int(met_mask[dmask].sum()) / max(n_cls, 1),
+                "accuracy": (float(np.mean(acc_by_id[cols.model[ci][dmask]]))
+                             if n_done else 0.0),
+                "mean_latency": (float(np.mean(e2e[dmask]))
+                                 if n_done else 0.0),
             }
         return out
 

@@ -9,8 +9,7 @@ bit-deterministic under a fixed seed regardless of heap internals.
 from __future__ import annotations
 
 import heapq
-from dataclasses import dataclass, field
-from typing import Any, List
+from typing import Any, List, NamedTuple
 
 # Event kinds (request lifecycle: uplink -> queue -> inference -> downlink).
 ARRIVAL = "arrival"    # request leaves the device; uplink transfer starts
@@ -19,12 +18,15 @@ FINISH = "finish"      # inference finished on a replica
 DEPART = "depart"      # downlink done; response reached the device
 
 
-@dataclass(order=True)
-class Event:
+class Event(NamedTuple):
+    """Heap record.  A NamedTuple compares field-by-field in C — the
+    unique ``seq`` always breaks ``time`` ties before ``kind``/``data``
+    are ever reached, preserving the FIFO tie-break while keeping the
+    heap's comparison off the Python bytecode path."""
     time: float
     seq: int
-    kind: str = field(compare=False)
-    data: Any = field(compare=False, default=None)
+    kind: str
+    data: Any = None
 
 
 class EventQueue:

@@ -7,6 +7,19 @@ cap (admission control).  ``ReplicaPool`` routes a selected model to the
 least-loaded capable replica and answers the queue-wait estimates
 ``W_queue(m)`` that the queue-aware policy consumes.
 
+Hot-path representation: the discrete-event engine ``bind()``s the pool
+to its SoA request columns at run start, after which queues hold plain
+request *indices* (ints into the engine's record arrays) instead of
+request objects, and the wait estimate walks an int deque against a
+model-id column and a current-μ list — no dict lookups, no attribute
+chasing.  Each replica additionally tracks per-model queue counts, so
+beyond ``EXACT_WALK_MAX`` queued requests the estimate switches to the
+O(n_models) closed form ``Σ counts[m]·μ(m)/speed`` (identical up to
+float associativity; the element-order walk is kept below the threshold
+so moderate-load seeded runs stay bit-identical to the historical
+object walk).  Unbound pools (constructed directly in tests) keep the
+legacy object-queue behaviour.
+
 ``GaussianServiceModel`` is the ground-truth latency process shared with
 the closed-loop simulator: truncated normal per model plus the optional
 co-tenant spike process of ``core/simulate.py``.
@@ -15,12 +28,19 @@ from __future__ import annotations
 
 from collections import deque
 from dataclasses import dataclass, field
-from typing import Deque, Dict, List, Optional, Tuple
+from typing import Deque, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
 from repro.core.profiles import ProfileStore
 from repro.core.zoo import ZooEntry
+
+# Queue depth up to which the wait estimate walks the FIFO element by
+# element (bit-identical to the historical per-object walk); deeper
+# queues use the per-model-count closed form, which differs only by
+# float-addition associativity but turns the saturated-load estimate
+# from O(depth) into O(n_models).
+EXACT_WALK_MAX = 64
 
 
 @dataclass
@@ -44,7 +64,11 @@ class GaussianServiceModel:
 @dataclass
 class Replica:
     """One FIFO-queued server.  ``models=()`` means it serves the whole
-    zoo (shared endpoint); otherwise only the named models."""
+    zoo (shared endpoint); otherwise only the named models.
+
+    When the owning pool is ``bind()``-ed, ``queue`` holds request
+    indices (ints) and ``current`` the in-service request index; unbound
+    replicas carry request objects, the legacy interface."""
     name: str
     models: Tuple[str, ...] = ()
     speed: float = 1.0
@@ -57,6 +81,12 @@ class Replica:
     busy_ms: float = 0.0
     peak_depth: int = 0
 
+    # SoA binding (set by ReplicaPool.bind); None == legacy object mode.
+    _model_of: Optional[Sequence[int]] = field(default=None, repr=False,
+                                               init=False)
+    _mu: Optional[List[float]] = field(default=None, repr=False, init=False)
+    _counts: Optional[List[int]] = field(default=None, repr=False, init=False)
+
     def serves(self, model: str) -> bool:
         return not self.models or model in self.models
 
@@ -67,11 +97,36 @@ class Replica:
         return (self.max_queue_depth is not None
                 and self.depth() >= self.max_queue_depth)
 
+    # -- SoA fast path --------------------------------------------------
+    def enqueue(self, rid: int, mid: int) -> None:
+        """Queue request ``rid`` (model id ``mid``) — bound mode only."""
+        self.queue.append(rid)
+        self._counts[mid] += 1
+
+    def pop_request(self) -> int:
+        """Dequeue the next request index — bound mode only."""
+        rid = self.queue.popleft()
+        self._counts[self._model_of[rid]] -= 1
+        return rid
+
     def estimated_wait(self, now: float, store: ProfileStore) -> float:
         """Queue-wait estimate using what the router knows: the profile
         store's mean latency per queued model plus the in-flight
         remainder.  This is W_queue(m) for any model routed here."""
         w = max(0.0, self.busy_until - now) if self.current is not None else 0.0
+        mu = self._mu
+        if mu is not None:
+            q = self.queue
+            s = self.speed
+            if len(q) <= EXACT_WALK_MAX:
+                mo = self._model_of
+                for rid in q:
+                    w += mu[mo[rid]] / s
+            else:
+                for m, c in enumerate(self._counts):
+                    if c:
+                        w += c * (mu[m] / s)
+            return w
         for req in self.queue:
             w += store[req.model].mu / self.speed
         return w
@@ -83,14 +138,50 @@ class Replica:
         self.n_served = 0
         self.busy_ms = 0.0
         self.peak_depth = 0
+        self._model_of = None
+        self._mu = None
+        self._counts = None
 
 
 class ReplicaPool:
     def __init__(self, replicas: List[Replica]):
         assert replicas, "need at least one replica"
         self.replicas = list(replicas)
+        # model name -> capable replicas (and their pool indices), in
+        # pool order (the tie-break order ``min`` preserved
+        # historically).  Built on bind(); a None cache falls back to a
+        # per-call scan.
+        self._cands: Optional[Dict[str, List[Replica]]] = None
+        self._cand_idx: Optional[Dict[str, List[int]]] = None
+
+    def bind(self, model_names: Sequence[str], model_of: Sequence[int],
+             mu_now: List[float]) -> None:
+        """Attach the engine's SoA columns for one run: ``model_of`` maps
+        request index -> model id (written by the engine as requests are
+        routed), ``mu_now`` is the live model-id -> current-μ list the
+        engine keeps in sync with the profile store.  Also freezes the
+        model -> candidate-replica index (the topology is static within
+        a run)."""
+        n_models = len(model_names)
+        for r in self.replicas:
+            r._model_of = model_of
+            r._mu = mu_now
+            r._counts = [0] * n_models
+        self._cands = {}
+        self._cand_idx = {}
+        for name in model_names:
+            ix = [i for i, r in enumerate(self.replicas) if r.serves(name)]
+            if not ix:
+                raise KeyError(f"no replica serves model {name!r}")
+            self._cands[name] = [self.replicas[i] for i in ix]
+            self._cand_idx[name] = ix
 
     def candidates(self, model: str) -> List[Replica]:
+        if self._cands is not None:
+            try:
+                return self._cands[model]
+            except KeyError:
+                raise KeyError(f"no replica serves model {model!r}")
         out = [r for r in self.replicas if r.serves(model)]
         if not out:
             raise KeyError(f"no replica serves model {model!r}")
@@ -99,8 +190,10 @@ class ReplicaPool:
     def best_for(self, model: str, now: float,
                  store: ProfileStore) -> Replica:
         """Least-estimated-wait capable replica (ties: pool order)."""
-        return min(self.candidates(model),
-                   key=lambda r: r.estimated_wait(now, store))
+        cands = self.candidates(model)
+        if len(cands) == 1:
+            return cands[0]
+        return min(cands, key=lambda r: r.estimated_wait(now, store))
 
     def queue_wait(self, model: str, now: float,
                    store: ProfileStore) -> float:
@@ -108,9 +201,45 @@ class ReplicaPool:
         return min(r.estimated_wait(now, store)
                    for r in self.candidates(model))
 
+    def waits_by_name(self, now: float, store: ProfileStore
+                      ) -> Dict[str, float]:
+        """One routing snapshot: every replica's wait computed exactly
+        once (the estimate inlined — same ops, same floats as
+        ``estimated_wait``), then reduced per model over its cached
+        candidate indices — what ``queue_wait`` would produce per
+        model, without re-walking shared queues once per pool member.
+        Requires ``bind()`` (the engine's per-run setup)."""
+        assert self._cands is not None, "waits_by_name requires bind()"
+        ws = []
+        for r in self.replicas:
+            w = max(0.0, r.busy_until - now) if r.current is not None \
+                else 0.0
+            q = r.queue
+            if q:
+                mu, s = r._mu, r.speed
+                if len(q) <= EXACT_WALK_MAX:
+                    mo = r._model_of
+                    for rid in q:
+                        w += mu[mo[rid]] / s
+                else:
+                    for m, c in enumerate(r._counts):
+                        if c:
+                            w += c * (mu[m] / s)
+            ws.append(w)
+        out = {}
+        for m, ix in self._cand_idx.items():
+            w = ws[ix[0]]
+            for j in ix[1:]:
+                if ws[j] < w:
+                    w = ws[j]
+            out[m] = w
+        return out
+
     def reset(self) -> None:
         for r in self.replicas:
             r.reset()
+        self._cands = None
+        self._cand_idx = None
 
 
 def shared_replicas(n: int = 1, *, speeds: Optional[List[float]] = None,

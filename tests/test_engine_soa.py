@@ -1,0 +1,319 @@
+"""SoA engine hot path: bit-identity against pre-refactor seeded runs,
+replica fast-path semantics (int queues, wait estimates, per-batch
+snapshots), the lazy SimRequest materialization, and the slow-marked
+performance acceptance gates.
+
+The two goldens below were captured by running the PR-4 (pre-SoA)
+engine verbatim; every float is pinned exactly — the refactor swapped
+the data representation, not the simulation."""
+import time
+
+import numpy as np
+import pytest
+
+from repro.core.netmodel import NetworkModel
+from repro.core.policy import DynamicGreedy, ModiPick
+from repro.core.profiles import ModelProfile, ProfileStore
+from repro.core.zoo import TABLE2
+from repro.router.queueaware import shifted_store
+from repro.sim import (PoissonArrivals, ServingSimulator,
+                       per_model_replicas, shared_replicas)
+from repro.sim.replica import EXACT_WALK_MAX
+
+NET = NetworkModel(50.0, 25.0)
+
+# Best-of-3 requests/sec of the PR-4 event loop on this host, measured
+# from a pristine PR-4 worktree immediately before the SoA refactor:
+# ServingSimulator(TABLE2, NET, per_model_replicas(TABLE2), seed=3),
+# ModiPick(t_threshold=20), 2000 requests, PoissonArrivals(40).
+PR4_RATE40_QA_RPS = 3427.0       # queue_aware=True
+PR4_RATE40_PLAIN_RPS = 4013.0    # queue_aware=False
+
+
+# ----------------------------------------------------------------------
+# bit-identical goldens through the SoA refactor
+# ----------------------------------------------------------------------
+
+def test_golden_soa_classes_window_sla_mix_unchanged():
+    """Queue-aware run exercising every new column at once — lookahead
+    batching, per-request SLA mix, class labels — pinned bit-for-bit to
+    the pre-refactor engine."""
+    eng = ServingSimulator(TABLE2, NET, per_model_replicas(TABLE2), seed=7,
+                           queue_aware=True, batch_window_ms=5.0)
+    r = eng.run(ModiPick(t_threshold=20.0), 250.0, 500,
+                arrivals=PoissonArrivals(40.0),
+                sla_for=lambda i: 150.0 if i % 3 == 0 else 300.0,
+                class_for=lambda i: "interactive" if i % 3 == 0 else "batch")
+    assert (r.n_arrived, r.n_completed, r.n_rejected) == (500, 500, 0)
+    assert r.sla_attainment == 0.918
+    assert r.mean_accuracy == 0.7644200000000001
+    assert r.mean_latency == 195.7473904291624
+    assert r.p99_latency == 315.2542742867032
+    assert r.mean_queue_wait == 36.03014440619576
+    assert r.horizon_ms == 12595.728078284552
+    assert r.per_class["batch"]["n_arrived"] == 333
+    assert r.per_class["batch"]["attainment"] == 0.972972972972973
+    assert r.per_class["batch"]["accuracy"] == 0.8045255255255257
+    assert r.per_class["batch"]["mean_latency"] == 228.88442811973565
+    assert r.per_class["interactive"]["attainment"] == 0.8083832335329342
+    assert r.per_class["interactive"]["accuracy"] == 0.6844491017964072
+    assert r.per_class["interactive"]["mean_latency"] == 129.67174042340864
+
+
+def test_golden_soa_shedding_shared_pool_unchanged():
+    """Hard-capped shared pool under overload (deep shedding exercises
+    the reject/depart columns and the rejected-inclusive horizon)."""
+    eng = ServingSimulator(TABLE2, NET, shared_replicas(3, max_queue_depth=4),
+                           seed=13)
+    r = eng.run(DynamicGreedy(), 250.0, 400, arrivals=PoissonArrivals(50.0))
+    assert (r.n_arrived, r.n_completed, r.n_rejected) == (400, 257, 143)
+    assert r.sla_attainment == 0.0175
+    assert r.mean_accuracy == 0.818591439688716
+    assert r.mean_latency == 433.22467826000116
+    assert r.p99_queue_wait == 336.09236612235816
+    assert r.replica_utilization == {'r0': 0.9925038681183374,
+                                     'r1': 0.9743912120965644,
+                                     'r2': 0.9725285189388206}
+    assert r.model_usage == {
+        'InceptionV3': 0.023346303501945526,
+        'InceptionV4': 0.17120622568093385,
+        'MobileNetV1-1.0': 0.011673151750972763,
+        'NasNet-Large': 0.7859922178988327,
+        'NasNet-Mobile': 0.007782101167315175}
+
+
+# ----------------------------------------------------------------------
+# lazy SimRequest materialization from the record columns
+# ----------------------------------------------------------------------
+
+def test_request_views_materialize_from_columns():
+    eng = ServingSimulator(TABLE2, NET, shared_replicas(1, max_queue_depth=2),
+                           seed=5)
+    r = eng.run(ModiPick(t_threshold=20.0), 250.0, 300,
+                arrivals=PoissonArrivals(60.0),
+                class_for=lambda i: "gold" if i % 2 else "bronze")
+    done = eng.completed_requests
+    shed = eng.rejected_requests
+    assert eng.completed_requests is done      # cached, built once
+    assert len(done) == r.n_completed and len(shed) == r.n_rejected
+    assert all(q.model and q.replica == "r0" and not q.rejected
+               for q in done)
+    assert all(q.rejected and q.reject_reason == "replica queue full"
+               and q.model for q in shed)
+    assert {q.sla_class for q in done} <= {"gold", "bronze"}
+    # e2e/queue-wait derived fields reproduce the summary statistics
+    met = sum(q.e2e_ms <= q.t_sla_ms for q in done)
+    assert r.sla_attainment == met / r.n_arrived
+    assert r.mean_latency == float(np.mean([q.e2e_ms for q in done]))
+    assert all(q.queue_wait_ms >= 0.0 for q in done)
+
+
+# ----------------------------------------------------------------------
+# replica fast path: int queues, wait estimates, per-batch snapshot
+# ----------------------------------------------------------------------
+
+def _bound_pool(n_replicas, queue_depths, mu_now):
+    """Pool bound to synthetic SoA state: request i has model id
+    ``i % len(mu_now)``."""
+    pool = shared_replicas(n_replicas)
+    total = sum(queue_depths)
+    model_of = [i % len(mu_now) for i in range(total)]
+    pool.bind([f"m{j}" for j in range(len(mu_now))], model_of, list(mu_now))
+    rid = 0
+    for r, depth in zip(pool.replicas, queue_depths):
+        for _ in range(depth):
+            r.enqueue(rid, model_of[rid])
+            rid += 1
+    return pool
+
+
+def test_waits_by_name_matches_per_model_queue_wait():
+    store = None  # bound fast path never touches the store
+    mu_now = [10.0, 35.0, 3.5]
+    pool = _bound_pool(4, [3, 0, 7, 1], mu_now)
+    pool.replicas[2].current = 99
+    pool.replicas[2].busy_until = 12.5
+    snap = pool.waits_by_name(now=2.0, store=store)
+    for name in ("m0", "m1", "m2"):
+        assert snap[name] == pool.queue_wait(name, 2.0, store)
+    assert set(snap) == {"m0", "m1", "m2"}
+
+
+def test_deep_queue_closed_form_matches_walk():
+    """Beyond EXACT_WALK_MAX the wait estimate switches to the
+    per-model-count closed form: same sum up to float associativity,
+    O(n_models) instead of O(depth)."""
+    mu_now = [12.0, 48.0]
+    deep = EXACT_WALK_MAX * 3
+    pool = _bound_pool(1, [deep], mu_now)
+    r = pool.replicas[0]
+    est = r.estimated_wait(0.0, None)
+    exact = sum(mu_now[i % 2] for i in range(deep))
+    assert est == pytest.approx(exact, rel=1e-12)
+    # and the exact element walk is still used at the threshold
+    while len(r.queue) > EXACT_WALK_MAX:
+        r.pop_request()
+    est_small = r.estimated_wait(0.0, None)
+    assert est_small == pytest.approx(
+        sum(mu_now[r._model_of[rid] % 2] for rid in r.queue), rel=1e-12)
+
+
+def test_unbound_replica_keeps_legacy_object_walk():
+    """Pools built outside the engine (no bind()) still estimate waits
+    by walking request objects against the live store."""
+    from repro.sim.engine import SimRequest
+    pool = shared_replicas(1)
+    store = ProfileStore([ModelProfile(name="m0", accuracy=0.9)])
+    store.profiles["m0"].mu = 25.0
+    req = SimRequest(rid=0, arrival_ms=0.0, model="m0")
+    pool.replicas[0].queue.append(req)
+    assert pool.replicas[0].estimated_wait(0.0, store) == 25.0
+    assert pool.queue_wait("m0", 0.0, store) == 25.0
+
+
+def test_shifted_view_matches_eager_shifted_table():
+    """The lazy shifted view assembles the same snapshot
+    ``ProfileTable.shifted`` would build, field for field, and only
+    materializes per-profile objects on demand."""
+    ps = []
+    rng = np.random.default_rng(3)
+    for i in range(6):
+        p = ModelProfile(name=f"m{i}", accuracy=float(rng.uniform(0.1, 1)))
+        p.mu, p.var, p.n_obs = float(rng.uniform(5, 80)), 4.0, 10
+        ps.append(p)
+    store = ProfileStore(ps)
+    waits = {f"m{i}": float(rng.uniform(0, 30)) for i in range(6)}
+    view = store.table() and shifted_store(store, waits.__getitem__)
+    eager = store.table().shifted(
+        np.array([waits[n] for n in store.table().names]))
+    tab = view.table()
+    np.testing.assert_array_equal(tab.mu, eager.mu)
+    np.testing.assert_array_equal(tab.sigma, eager.sigma)
+    np.testing.assert_array_equal(tab.queue_mu, eager.queue_mu)
+    np.testing.assert_array_equal(tab.acc_order, eager.acc_order)
+    assert tab.fastest == eager.fastest
+    assert tab.names == eager.names
+    # scalar-path cache mirrors the arrays exactly
+    mu_l, sig_l, musig_l, *_ = tab.scalar_cache()
+    np.testing.assert_array_equal(mu_l, tab.mu)
+    np.testing.assert_array_equal(musig_l, tab.mu + tab.sigma)
+    # per-profile objects only on demand, shifted like the eager view
+    assert view["m2"].mu == store["m2"].mu + waits["m2"]
+    assert view["m2"].accuracy == store["m2"].accuracy
+    # identity root survives wrapping (StaticGreedy's freeze contract)
+    assert view.base is store
+
+
+def test_observe_on_shifted_view_stays_view_local():
+    """Regression: feeding telemetry into a shifted view must neither
+    corrupt the base store's cached snapshot (the view shares the base
+    sigma array) nor crash on the view's read-only zeros queue_mu — it
+    updates the view's own lazy profile copies, like the historical
+    eager-copy view did."""
+    ps = []
+    for i, mu in enumerate((40.0, 9.0)):
+        p = ModelProfile(name=f"m{i}", accuracy=0.9 - 0.3 * i)
+        p.mu, p.var, p.n_obs = mu, 4.0, 10
+        ps.append(p)
+    store = ProfileStore(ps)
+    base_tab = store.table()
+    sigma_before = base_tab.sigma.copy()
+    view = shifted_store(store, lambda n: 10.0)
+    view.observe("m0", 60.0)            # must not raise
+    view.observe_queue("m0", 5.0)
+    np.testing.assert_array_equal(base_tab.sigma, sigma_before)
+    assert store["m0"].mu == 40.0       # base profiles untouched
+    assert view["m0"].mu != 40.0 + 10.0  # view's copy absorbed the obs
+    assert view.table().mu[0] == view["m0"].mu  # rebuilt view snapshot
+
+
+def test_batch_of_one_still_validates_backend():
+    """Regression: the scalar shortcut must not bypass backend
+    validation — an invalid name raises exactly like it does for larger
+    batches."""
+    store = ProfileStore([ModelProfile(name="m0", accuracy=0.9)])
+    store.profiles["m0"].mu, store.profiles["m0"].n_obs = 10.0, 5
+    rng = np.random.default_rng(0)
+    with pytest.raises(ValueError, match="unknown policy backend"):
+        ModiPick(t_threshold=20.0).select_batch(store, [100.0], rng,
+                                                backend="bogus")
+
+
+def test_select_lean_equivalence_fuzz():
+    """select_lean == select_traced: same pick, same fallback, same RNG
+    stream — over randomized pools, thresholds and budgets."""
+    rng = np.random.default_rng(17)
+    for _ in range(400):
+        n = int(rng.integers(1, 13))
+        ps = []
+        for i in range(n):
+            p = ModelProfile(name=f"m{i}",
+                             accuracy=float(rng.uniform(0.05, 1.0)))
+            p.mu = float(rng.uniform(1, 200))
+            p.var = float(rng.uniform(0, 20)) ** 2
+            p.n_obs = 50
+            ps.append(p)
+        store = ProfileStore(ps)
+        policy = ModiPick(t_threshold=float(rng.uniform(0, 50)),
+                          gamma=float(rng.choice([1.0, 4.0])))
+        b = float(rng.uniform(-20, 500))
+        seed = int(rng.integers(1 << 30))
+        r1, r2 = np.random.default_rng(seed), np.random.default_rng(seed)
+        a = policy.select_traced(store, b, r1)
+        lean = policy.select_lean(store, b, r2)
+        assert a.chosen == lean.chosen
+        assert a.fallback == lean.fallback
+        assert r1.random() == r2.random()      # identical stream state
+
+
+# ----------------------------------------------------------------------
+# slow acceptance gates (opt-in, pyproject slow marker)
+# ----------------------------------------------------------------------
+
+def _engine_rps(queue_aware: bool, repeats: int = 3) -> float:
+    best = 0.0
+    for _ in range(repeats):
+        eng = ServingSimulator(TABLE2, NET, per_model_replicas(TABLE2),
+                               seed=3, queue_aware=queue_aware)
+        t0 = time.perf_counter()
+        eng.run(ModiPick(t_threshold=20.0), 250.0, 2000,
+                arrivals=PoissonArrivals(40.0))
+        best = max(best, 2000.0 / (time.perf_counter() - t0))
+    return best
+
+
+@pytest.mark.slow
+def test_soa_engine_3x_pr4_loop_on_rate40_sweep():
+    """Acceptance: the SoA engine runs the rate-40 sweep point (plain +
+    queue-aware ModiPick, the load_sweep workhorses) at >= 3x the PR-4
+    event loop measured on this host."""
+    pr4_s = 2000.0 / PR4_RATE40_QA_RPS + 2000.0 / PR4_RATE40_PLAIN_RPS
+    new_s = 2000.0 / _engine_rps(True) + 2000.0 / _engine_rps(False)
+    assert pr4_s / new_s >= 3.0, \
+        f"rate-40 sweep point speedup {pr4_s / new_s:.2f}x < 3x"
+
+
+@pytest.mark.slow
+def test_jax_backend_not_slower_than_numpy_at_4096():
+    """Acceptance: with stages 1-3 device-resident, the jax backend must
+    match or beat numpy from JAX_MIN_BATCH up on this host."""
+    from repro.core.zoo import make_store
+    store = make_store(TABLE2)
+    policy = ModiPick(t_threshold=20.0)
+    rng = np.random.default_rng(23)
+    t_input = np.clip(rng.normal(50.0, 25.0, size=4096), 0.0, None)
+    budgets = np.maximum(250.0 - 2.0 * t_input, 5.0)
+
+    def best_rate(backend):
+        brng = np.random.default_rng(1)
+        run = lambda: policy.select_batch(store, budgets, brng,
+                                          backend=backend)
+        run()                                   # warm-up / jit compile
+        best = float("inf")
+        for _ in range(5):
+            t0 = time.perf_counter()
+            run()
+            best = min(best, time.perf_counter() - t0)
+        return 4096.0 / best
+
+    assert best_rate("jax") >= best_rate("numpy")

@@ -117,6 +117,106 @@ def test_policy_select_probs(B, n, gamma):
     np.testing.assert_allclose(rows[~active], 0.0, atol=1e-7)
 
 
+# ----------------------------------------------------------------------
+# device-resident stages 1–2: fused masks vs the numpy reference
+# ----------------------------------------------------------------------
+
+def _grid_pool_and_budgets(seed, n, B):
+    """Random pool + budgets quantized to a 0.25 grid in [0, 512]: every
+    value — and every sum/difference stages 1–2 form from them — is
+    exactly representable in BOTH float32 and float64, so the device
+    masks must equal the f64 numpy reference bit for bit (no
+    precision-boundary flakes by construction)."""
+    rng = np.random.default_rng(seed)
+    q = lambda x: np.round(np.asarray(x) * 4.0) / 4.0
+    mu = q(rng.uniform(1.0, 200.0, n))
+    sigma = q(rng.uniform(0.0, 20.0, n))
+    acc = rng.uniform(0.05, 1.0, n)          # not used by stages 1–2
+    t_u = q(rng.uniform(-20.0, 400.0, B))
+    t_l = t_u - q(rng.uniform(0.0, 50.0))
+    return mu, sigma, acc, t_u, t_l
+
+
+@pytest.mark.parametrize("seed,n,B", [
+    (0, 11, 64),     # Table-2-sized pool
+    (1, 1, 16),      # singleton pool
+    (2, 12, 256),    # one full batch block
+    (3, 7, 1000),    # ragged batch
+])
+def test_device_masks_match_numpy_reference(seed, n, B):
+    """Property: the fused pipeline's stage 1–2 masks and base indices
+    (computed in jitted jnp through ``masks_device``) equal the
+    ``policy_vec.modipick_masks`` numpy reference over randomized pools
+    and budgets — including fallback rows."""
+    from repro.core.policy_vec import modipick_masks
+    from repro.core.profiles import ProfileTable
+    from repro.kernels import policy_select
+
+    mu, sigma, acc, t_u, t_l = _grid_pool_and_budgets(seed, n, B)
+    tab = ProfileTable(names=tuple(f"m{i}" for i in range(n)),
+                       accuracy=acc, mu=mu, sigma=sigma,
+                       queue_mu=np.zeros(n))
+    base, has_base, eligible, _ = modipick_masks(tab, t_u, t_l)
+    d_base, d_has, d_elig = policy_select.masks_device(
+        tab.device_pool(), t_u, t_l)
+    np.testing.assert_array_equal(has_base, d_has)
+    np.testing.assert_array_equal(base[has_base], d_base[has_base])
+    np.testing.assert_array_equal(eligible, d_elig)
+    # the pure-jnp oracle in kernels.ref agrees with the traced stages
+    rank = np.empty(n, np.float32)
+    rank[tab.acc_order] = np.arange(n, dtype=np.float32)
+    r_base, r_has, r_elig = ref.modipick_masks_ref(
+        jnp.asarray(mu, jnp.float32), jnp.asarray(sigma, jnp.float32),
+        jnp.asarray(rank), jnp.asarray(t_u, jnp.float32),
+        jnp.asarray(t_l, jnp.float32))
+    np.testing.assert_array_equal(np.asarray(r_has), has_base)
+    np.testing.assert_array_equal(np.asarray(r_base)[has_base],
+                                  base[has_base])
+    np.testing.assert_array_equal(np.asarray(r_elig), eligible)
+
+
+def test_select_fused_device_resident_picks():
+    """``select_fused`` goes from raw pool operands to sampled indices
+    in one jit: every pick must land inside the request's stage-2
+    eligible set, fallback rows must route to the fastest model, and a
+    degenerate single-model pool must pick it always."""
+    from repro.core.policy_vec import modipick_masks
+    from repro.core.profiles import ProfileTable
+    from repro.kernels import policy_select
+
+    mu, sigma, acc, t_u, t_l = _grid_pool_and_budgets(7, 11, 512)
+    tab = ProfileTable(names=tuple(f"m{i}" for i in range(11)),
+                       accuracy=acc, mu=mu, sigma=sigma,
+                       queue_mu=np.zeros(11))
+    _, has_base, eligible, _ = modipick_masks(tab, t_u, t_l)
+    idx, d_has = policy_select.select_fused(tab.device_pool(), t_u, t_l,
+                                            gamma=1.0, seed=5)
+    np.testing.assert_array_equal(has_base, d_has)
+    assert all(eligible[b, idx[b]] for b in np.flatnonzero(has_base))
+    assert (idx[~has_base] == tab.fastest).all()
+    # distribution sanity on a repeated budget row: empirical frequency
+    # tracks the reference probability vector
+    from repro.core.policy_vec import modipick_probs
+    t1 = np.full(20000, 150.0)
+    tl1 = t1 - 20.0
+    _, _, e1, _ = modipick_masks(tab, t1, tl1)
+    p_ref = modipick_probs(tab, t1, tl1, e1, 1.0)[0]
+    picks, _ = policy_select.select_fused(tab.device_pool(), t1, tl1,
+                                          gamma=1.0, seed=11)
+    emp = np.bincount(picks, minlength=11) / len(picks)
+    np.testing.assert_allclose(emp, p_ref, atol=0.015)
+
+
+def test_fused_jit_cache_reused_across_calls():
+    """The compiled selection is cached per (pool_size, gamma,
+    batch_block): repeated calls must hit the same callable, and
+    distinct gammas must not collide."""
+    from repro.kernels import policy_select
+    a = policy_select._fused_jit(128, 1.0, 256, False)
+    assert policy_select._fused_jit(128, 1.0, 256, False) is a
+    assert policy_select._fused_jit(128, 4.0, 256, False) is not a
+
+
 def test_flash_vs_model_xla_path():
     """The model's chunked XLA attention and the Pallas kernel agree."""
     from repro.models.attention import attention_full

@@ -49,18 +49,28 @@ budgets_strategy = st.lists(st.floats(-20.0, 500.0), min_size=1, max_size=32)
 # ProfileTable snapshot semantics
 # ----------------------------------------------------------------------
 
-def test_table_cached_until_observation():
+def test_table_cached_and_patched_in_place_on_observation():
     store = store_from([(0.9, 50, 1), (0.5, 5, 1)])
     t1 = store.table()
     assert store.table() is t1          # cached, no per-call rebuild
-    store.observe("m1", 7.0)            # dirty flag
+    store.observe("m1", 7.0)            # telemetry patches in place
     t2 = store.table()
-    assert t2 is not t1
+    assert t2 is t1                     # no snapshot churn per observe
     assert t2.mu[1] == store["m1"].mu
+    assert t2.sigma[1] == store["m1"].sigma
     store.observe_queue("m0", 3.0)
-    t3 = store.table()
-    assert t3 is not t2
-    assert t3.queue_mu[0] == store["m0"].queue_mu
+    assert store.table() is t1
+    assert t1.queue_mu[0] == store["m0"].queue_mu
+    # the patched snapshot equals a from-scratch rebuild, field for field
+    fresh = ProfileTable.from_store(store)
+    np.testing.assert_array_equal(t1.mu, fresh.mu)
+    np.testing.assert_array_equal(t1.sigma, fresh.sigma)
+    np.testing.assert_array_equal(t1.queue_mu, fresh.queue_mu)
+    assert t1.fastest == fresh.fastest
+    np.testing.assert_array_equal(t1.acc_order, fresh.acc_order)
+    # explicit invalidation (direct profile mutation) still rebuilds
+    store.invalidate()
+    assert store.table() is not t1
 
 
 def test_table_order_matches_scalar_sort():
