@@ -18,13 +18,20 @@ anchor.  Configs:
   a scalar (batch-of-1) selection; the load_sweep workhorse.
 - ``batched``: the same policy over 4 replicas per model, driven by
   200-wide simultaneous arrival bursts over a zero-jitter network —
-  same-timestamp ENQUEUEs group into one ``route_batch`` call, the
-  vectorized selection regime.
+  same-timestamp ENQUEUEs group into one ``route_batch_arrays`` call
+  with intra-batch load charging (each admitted pick's μ is charged to
+  its replica before the next request in the burst is judged).
+- ``batched_snapshot``: ablation of the same burst workload with
+  ``charge_batches=False`` — every request in a burst judged against
+  the one stale W_queue snapshot (the pre-charging behaviour whose
+  attainment collapse this benchmark originally exposed).
 
 ``benchmarks/run.py --json`` records the rows in
 ``BENCH_engine_throughput.json`` so the perf trajectory is tracked
 across PRs; ``--smoke`` runs a 2k-request row per config as the tier-1
-bit-rot guard.
+bit-rot guard and additionally asserts the charged ``batched`` config
+attains ≥ 0.5 — a staleness-collapse regression (charging silently
+disengaging) fails the smoke run instead of surfacing at sweep time.
 """
 from __future__ import annotations
 
@@ -73,6 +80,12 @@ def _configs():
                 per_model_replicas(TABLE2, replicas_per_model=4),
                 seed=SEED, queue_aware=True),
             _burst_trace),
+        "batched_snapshot": (
+            lambda: ServingSimulator(
+                TABLE2, NetworkModel(50.0, 0.0),
+                per_model_replicas(TABLE2, replicas_per_model=4),
+                seed=SEED, queue_aware=True, charge_batches=False),
+            _burst_trace),
     }
 
 
@@ -97,6 +110,14 @@ def bench_rows(fast: bool = False,
                 f"wall_s={wall:.2f};attain={r.sla_attainment:.3f};"
                 f"shed={r.n_rejected};"
                 f"batches={eng.router.stats()['n_batches']}"))
+            if fast and name == "batched" and r.sla_attainment < 0.5:
+                # Tier-1-visible staleness guard (the smoke run is
+                # exercised by tests/test_router.py): charged burst
+                # routing attains ~1.0 here; a snapshot-regime relapse
+                # collapses it to ~0.15.
+                raise AssertionError(
+                    f"burst smoke attainment {r.sla_attainment:.3f} < 0.5 "
+                    "— intra-batch load charging regressed")
     return rows
 
 

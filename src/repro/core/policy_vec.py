@@ -82,6 +82,15 @@ def _resolve_backend(backend: Optional[str], n_batch: int) -> str:
     return backend
 
 
+def resolve_backend(backend: Optional[str], n_batch: int) -> str:
+    """Public backend resolution (``auto``/env/threshold → ``numpy`` or
+    ``jax``) — the Router uses it to decide whether a charged batch can
+    ride the device-resident ``lax.scan`` pass in
+    ``kernels.policy_select.charged_select`` under the same policy as
+    the uncharged fused pipeline."""
+    return _resolve_backend(backend, n_batch)
+
+
 @functools.lru_cache(maxsize=1)
 def _jax_available() -> bool:
     try:

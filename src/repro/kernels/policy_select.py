@@ -291,6 +291,135 @@ def select_fused(pool: DevicePool, t_u, t_l, *, gamma: float = 1.0,
     return np.where(has_base, out, pool.fastest), has_base
 
 
+# ======================================================================
+# Charged sequential-greedy selection: lax.scan over the batch, with the
+# per-replica wait ledger as the carry.
+# ======================================================================
+
+def _charged_step(rep_wait, xs, *, mu, sig, acc, rank, mu_charge,
+                  cand_mask, speed, gamma: float, slack: float,
+                  include_mu: bool, fastest: int):
+    """One scan step = one request judged against the *charged* waits.
+
+    Carry: ``rep_wait`` (R,) — every replica's wait including all
+    charges so far.  Per step: derive the live ``W_queue(m)`` row (min
+    over each model's candidate replicas), run admission viability +
+    shifted-μ stages 1–3 + the inverse-CDF draw against it, then charge
+    the admitted pick's μ/speed to its least-loaded capable replica
+    before the next step sees the carry.
+    """
+    tu, tl, r01, lim = xs
+    # (npad,) per-model wait: min over candidate replicas.  Padded lanes
+    # have no candidates → +inf; they also carry PAD_MU, so clamping
+    # their shift to 0 keeps every downstream comparison finite.
+    wq_raw = jnp.min(jnp.where(cand_mask, rep_wait[None, :], jnp.inf),
+                     axis=1)
+    wq = jnp.where(jnp.isfinite(wq_raw), wq_raw, 0.0)
+
+    # SLA-aware admission viability against the charged waits: some
+    # model must satisfy W_queue + slack (+ μ) < limit.  AdmitAll passes
+    # lim=+inf; padded *batch* rows pass lim=−inf so they neither admit
+    # nor charge.
+    cost = wq_raw + slack
+    if include_mu:
+        cost = cost + mu_charge
+    admitted = jnp.any(cost < lim)
+
+    mu_i = mu + wq                       # the shifted-μ store view
+    base, has_base, eligible = _stages12(mu_i, sig, rank,
+                                         tu[None], tl[None])
+    w = _utilities(mu_i, sig, acc, tu[None], tl[None], eligible, gamma)
+    cdf = jnp.cumsum(w[0])
+    total = cdf[-1]
+    thresh = r01 * total
+    choice = jnp.argmax(cdf > thresh).astype(jnp.int32)
+    choice = jnp.where(total > thresh, choice, base[0])
+    pick = jnp.where(has_base[0], choice, fastest)
+
+    # Charge: least-loaded capable replica, first-index tie-break (the
+    # pool-order rule ``ReplicaPool.best_for`` uses).
+    masked = jnp.where(cand_mask[pick], rep_wait, jnp.inf)
+    rep = jnp.argmin(masked).astype(jnp.int32)
+    delta = jnp.where(admitted, mu_charge[pick] / speed[rep], 0.0)
+    rep_wait = rep_wait.at[rep].add(delta)
+
+    w_chosen = jnp.where(admitted, wq[pick], jnp.min(wq_raw))
+    return rep_wait, (pick, admitted, has_base[0], rep, w_chosen)
+
+
+@functools.lru_cache(maxsize=32)
+def _charged_jit(npad: int, gamma: float, slack: float, include_mu: bool,
+                 fastest: int):
+    def run(mu, sig, acc, rank, mu_charge, cand_mask, speed, rep_wait,
+            t_u, t_l, r01, lim):
+        step = functools.partial(
+            _charged_step, mu=mu, sig=sig, acc=acc, rank=rank,
+            mu_charge=mu_charge, cand_mask=cand_mask, speed=speed,
+            gamma=gamma, slack=slack, include_mu=include_mu,
+            fastest=fastest)
+        _, ys = jax.lax.scan(step, rep_wait, (t_u, t_l, r01, lim))
+        return ys
+    return jax.jit(run)
+
+
+def charged_select(pool: DevicePool, t_u, t_l, state, *,
+                   gamma: float = 1.0, adm_limit=None,
+                   adm_slack: float = 0.0, adm_include_mu: bool = False,
+                   seed: int = 0, block_b: int = 256):
+    """Device-resident charged batch selection: a ``lax.scan`` over the
+    batch whose carry is the per-replica wait ledger, so request ``i``
+    is admitted and selected against waits that include the charges of
+    requests ``0..i-1`` — the sequential-greedy staleness fix, riding
+    the same fused stage-1–3 math as :func:`select_fused`.
+
+    ``state`` is a :class:`repro.router.charging.ChargedWaits` (replica
+    waits, model → candidate topology, speeds, live charge-μ).
+    ``adm_limit`` (B,) enables the in-scan SLA-aware viability test
+    (``W_queue + slack (+ μ) < limit``); ``None`` admits everything.
+    Returns numpy ``(picks, admitted, has_base, replica, w_chosen)``:
+    the picked pool index, the admission verdict, the fallback
+    indicator, the replica the charge landed on, and the chosen model's
+    pre-charge wait (for shed rows: the pool's minimum wait).
+
+    Like the uncharged fused path, the draw is categorical from the
+    exact per-request distribution but rides jax's RNG — same law as
+    the numpy sequential loop, not the same stream.
+    """
+    B = len(t_u)
+    n, npad = pool.n, pool.npad
+    R = len(state.rep_wait)
+    bpad = _bucket(B, block_b)
+    f32 = jnp.float32
+
+    cand_mask = np.zeros((npad, R), dtype=bool)
+    for m, c in enumerate(state.cand):
+        cand_mask[m, np.asarray(c)] = True
+    mu_charge = np.zeros(npad, np.float32)
+    mu_charge[:n] = np.asarray(state.mu, np.float64)[:n]
+
+    lim = np.full(bpad, -np.inf, np.float32)
+    if adm_limit is None:
+        lim[:B] = np.inf
+    else:
+        lim[:B] = np.asarray(adm_limit, np.float32)
+    r01 = jax.random.uniform(jax.random.PRNGKey(seed), (bpad,),
+                             dtype=f32)
+
+    fn = _charged_jit(npad, float(gamma), float(adm_slack),
+                      bool(adm_include_mu), pool.fastest)
+    picks, admitted, has_base, rep, w_chosen = fn(
+        pool.mu, pool.sigma, pool.acc, pool.rank,
+        jnp.asarray(mu_charge), jnp.asarray(cand_mask),
+        jnp.asarray(state.speed, f32),
+        jnp.asarray(state.rep_wait, f32),
+        jnp.asarray(_pad_batch(t_u, bpad)),
+        jnp.asarray(_pad_batch(t_l, bpad)),
+        r01, jnp.asarray(lim))
+    return (np.asarray(picks)[:B], np.asarray(admitted)[:B],
+            np.asarray(has_base)[:B], np.asarray(rep)[:B],
+            np.asarray(w_chosen, np.float64)[:B])
+
+
 def masks_device(pool: DevicePool, t_u, t_l):
     """Stages 1–2 alone, through the same traced code as
     :func:`select_fused` — the test surface for pinning the device

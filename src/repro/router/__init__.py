@@ -10,15 +10,20 @@ The package owns ModiPick's runtime decision end to end:
   inside the remaining budget);
 - ``queueaware``: the shifted-μ store view that folds ``W_queue(m)``
   into Eq. 1 budgets without touching any policy;
+- ``charging``: the :class:`ChargedWaits` intra-batch ledger — the
+  per-replica wait state the router charges each admitted pick into so
+  a burst is not judged against one stale snapshot;
 - ``router``: the :class:`Router` object — batched, admission-gated,
-  substrate-independent selection riding ``policy_vec.select_batch``.
+  substrate-independent selection with the array-native
+  ``route_batch_arrays`` hot path (:class:`BatchDecisions` columns out).
 """
 from repro.router.admission import (AdmissionController, AdmitAll,
                                     ClassAwareAdmission, ClassPolicy,
                                     DepthCapAdmission, SlaAwareAdmission,
                                     make_admission)
-from repro.router.api import (BudgetBreakdown, InferenceRequest,
-                              RouterDecision)
+from repro.router.api import (BatchDecisions, BudgetBreakdown,
+                              InferenceRequest, RouterDecision)
+from repro.router.charging import ChargedWaits
 from repro.router.queueaware import (QueueAwareSelector, queue_aware_budget,
                                      shifted_store)
 from repro.router.router import Router
@@ -26,7 +31,7 @@ from repro.router.router import Router
 __all__ = [
     "AdmissionController", "AdmitAll", "ClassAwareAdmission", "ClassPolicy",
     "DepthCapAdmission", "SlaAwareAdmission", "make_admission",
-    "BudgetBreakdown",
+    "BatchDecisions", "BudgetBreakdown", "ChargedWaits",
     "InferenceRequest", "RouterDecision", "QueueAwareSelector",
     "queue_aware_budget", "shifted_store", "Router",
 ]

@@ -25,6 +25,15 @@ replica slot) on it:
 Controllers return ``(admitted, reason)``; the reason string lands in
 ``RouterDecision.reject_reason`` and, from there, in shed-vs-degrade
 frontier reports.
+
+W_queue telemetry within a batch: under charged batch routing (the
+``route_batch_arrays`` default) the ``w_queue_fn`` a controller sees for
+request *i* reads the :class:`~repro.router.charging.ChargedWaits`
+ledger *after* picks 0..i−1 of the same batch were charged — admission
+judges the load the batch itself is creating, so shedding stays honest
+under simultaneous bursts.  Under ``charge=False`` (and in the
+historical object path) every request in the batch sees the same frozen
+snapshot, which under-sheds exactly when shedding matters most.
 """
 from __future__ import annotations
 
@@ -93,6 +102,13 @@ class SlaAwareAdmission(AdmissionController):
     (plus ``μ(m)`` when ``include_service_time``).  A request whose
     budget is already non-positive — the network alone ate the SLA — is
     always shed: every ``W_queue ≥ 0`` exceeds it.
+
+    The charged ``lax.scan`` kernel
+    (:func:`repro.kernels.policy_select.charged_select`) inlines this
+    exact viability test against the in-scan charged waits, which is why
+    the Router's scan fast path dispatches only for this controller (or
+    :class:`AdmitAll`) — their verdicts are reproducible inside the
+    kernel.
     """
     slack_ms: float = 0.0
     include_service_time: bool = False

@@ -18,7 +18,9 @@ Times are milliseconds throughout, matching the paper.
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Optional, Tuple
+from typing import List, Optional, Tuple
+
+import numpy as np
 
 from repro.core.policy import SelectionTrace
 
@@ -50,6 +52,54 @@ class BudgetBreakdown:
     @property
     def t_effective_ms(self) -> float:
         return self.t_budget_ms - self.w_queue_ms
+
+
+@dataclass(slots=True)
+class BatchDecisions:
+    """Array-native answer of ``Router.route_batch_arrays``: one column
+    per decision field, index-aligned with the input budget columns — no
+    per-request object is materialised on the hot path.
+
+    ``model_idx[i]`` is the chosen model's position in ``names`` (−1
+    where the request was shed), ``replica_idx[i]`` the pool index of
+    the replica the intra-batch charging placed the pick on (−1 when no
+    replica topology was charged — snapshot mode, pseudo-replica
+    charging, or a shed request), ``w_queue_ms[i]`` the chosen model's
+    charged wait at decision time (for shed rows: the minimum wait over
+    the pool, matching ``BudgetBreakdown``'s convention).
+    ``reject_code[i]`` indexes ``reasons`` (code 0 == "" == admitted).
+    ``traces`` is populated only for object-path consumers
+    (``route_batch`` wraps them into :class:`RouterDecision`s); array
+    consumers read the columns.
+    """
+    names: Tuple[str, ...]
+    model_idx: np.ndarray            # (B,) int32; -1 = shed
+    admitted: np.ndarray             # (B,) bool
+    fallback: np.ndarray             # (B,) bool
+    replica_idx: np.ndarray          # (B,) int32; -1 = caller places
+    w_queue_ms: np.ndarray           # (B,) float64
+    reject_code: np.ndarray          # (B,) int16 into reasons
+    reasons: List[str]
+    traces: Optional[List[Optional[SelectionTrace]]] = None
+
+    @classmethod
+    def empty(cls, n: int, names: Tuple[str, ...],
+              traces: bool = False) -> "BatchDecisions":
+        return cls(names=tuple(names),
+                   model_idx=np.full(n, -1, dtype=np.int32),
+                   admitted=np.zeros(n, dtype=bool),
+                   fallback=np.zeros(n, dtype=bool),
+                   replica_idx=np.full(n, -1, dtype=np.int32),
+                   w_queue_ms=np.zeros(n, dtype=np.float64),
+                   reject_code=np.zeros(n, dtype=np.int16),
+                   reasons=[""],
+                   traces=[None] * n if traces else None)
+
+    def reason_of(self, i: int) -> str:
+        return self.reasons[int(self.reject_code[i])]
+
+    def __len__(self) -> int:
+        return len(self.model_idx)
 
 
 @dataclass(slots=True)

@@ -22,8 +22,7 @@ behaviour is the zero-load special case.
 
 This module is substrate-independent (it lives under ``repro.router``
 and is consumed by the simulator, the discrete-event engine and the live
-executor alike); ``repro.sim.queueaware`` re-exports it for
-backwards compatibility.
+executor alike).
 """
 from __future__ import annotations
 

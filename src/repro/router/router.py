@@ -5,23 +5,51 @@ model that maximises accuracy within ``T_budget = T_sla − 2·T_input
 (− W_queue)`` — and this object is that decision's only implementation.
 The closed-loop paper simulator (``core.simulate``), the discrete-event
 engine (``sim.engine``) and the live pool executor
-(``serving.executor``) all construct a :class:`Router` and feed it
-:class:`~repro.router.api.InferenceRequest` records; what differs
-between them is purely the execution substrate around the returned
-:class:`~repro.router.api.RouterDecision`.
+(``serving.executor``) all route through a :class:`Router`; what differs
+between them is purely the execution substrate around the decision.
+
+Two entry surfaces share one implementation:
+
+- :meth:`Router.route_batch_arrays` — the array-native hot path: budget
+  / SLA-class / input-time *columns* in, a :class:`BatchDecisions`
+  column set (picked model indices, admission verdicts, charged replica
+  placements) out.  No per-request ``InferenceRequest`` /
+  ``RouterDecision`` object is constructed.  This is what the
+  discrete-event engine calls.
+- :meth:`Router.route` / :meth:`Router.route_batch` — the object
+  schema (``InferenceRequest`` → ``RouterDecision``) for callers that
+  want the full budget breakdown and stage traces; a thin adapter over
+  the array core.
+
+Intra-batch load charging (the staleness fix)
+---------------------------------------------
+A batch routed against one frozen ``W_queue`` snapshot degenerates: all
+B requests see the same idle-looking accurate models and pile onto
+them.  When the caller hands over a :class:`ChargedWaits` state (the
+engine builds one per batch from its replica pool), the batch is routed
+*sequentially-greedily*: each admitted pick's mean service time μ is
+charged to its chosen replica before the next request is judged, so
+request ``i+1`` sees waits that include requests ``0..i`` — admission
+verdicts and selection budgets both consult the charged waits, making
+shedding honest under bursts.  The charged batch is pick-for-pick what
+B sequential singleton ``route`` calls (the trusted scalar path) would
+produce.  ``charge=False`` keeps the historical one-snapshot semantics
+(the speculative-lookahead contract, and the ablation baseline).
 
 Per batch, the router:
 
-1. snapshots ``W_queue`` telemetry once (when queue-aware selection or
-   the admission controller consumes it);
+1. resolves the wait telemetry once — a live :class:`ChargedWaits`
+   state, a frozen ``w_queue_map`` snapshot, a ``w_queue_fn`` estimator,
+   or the store's own EWMA queue telemetry;
 2. runs the pluggable :class:`AdmissionController` per request *before*
-   selection — shed requests never spend a selection;
+   selection — shed requests never spend a selection (nor a charge);
 3. selects for the admitted requests: a singleton batch rides the scalar
-   ``policy.select_traced`` (draw-for-draw identical to the historical
-   per-request call sites, which is what keeps seeded single-SLA goldens
-   bit-identical), larger batches ride the vectorized
-   ``policy_vec.select_batch_traced`` — heterogeneous per-request SLAs
-   are just another column of the batched budget vector.
+   ``policy.select_traced``/``select_lean`` (draw-for-draw identical to
+   the historical per-request call sites, which is what keeps seeded
+   single-SLA goldens bit-identical); a charged batch rides the same
+   scalar core sequentially (or the device-resident ``lax.scan`` pass in
+   ``kernels.policy_select`` on the jax backend); an uncharged batch
+   rides the vectorized ``policy_vec.select_batch_traced``.
 
 Queue-aware mode presents the policy with the shifted-μ store view
 (``router.queueaware.shifted_store``), exactly as the per-call-site
@@ -34,11 +62,14 @@ from typing import Dict, List, Optional, Sequence
 import numpy as np
 
 from repro.core import policy_vec
-from repro.core.policy import Policy, budget
+from repro.core.policy import ModiPick, Policy, budget
 from repro.core.profiles import ProfileStore
 
-from repro.router.admission import AdmissionController, AdmitAll, DepthFn
-from repro.router.api import BudgetBreakdown, InferenceRequest, RouterDecision
+from repro.router.admission import (AdmissionController, AdmitAll, DepthFn,
+                                    SlaAwareAdmission)
+from repro.router.api import (BatchDecisions, BudgetBreakdown,
+                              InferenceRequest, RouterDecision)
+from repro.router.charging import ChargedWaits
 from repro.router.queueaware import WQueueFn, shifted_store
 
 
@@ -79,6 +110,8 @@ class Router:
         self.n_batches = 0
 
     # ------------------------------------------------------------------
+    # object surface (adapters over the array core)
+    # ------------------------------------------------------------------
     def route(self, request: InferenceRequest, rng: np.random.Generator, *,
               w_queue_fn: Optional[WQueueFn] = None,
               depth_fn: Optional[DepthFn] = None) -> RouterDecision:
@@ -90,33 +123,98 @@ class Router:
                     rng: np.random.Generator, *,
                     w_queue_fn: Optional[WQueueFn] = None,
                     depth_fn: Optional[DepthFn] = None,
-                    w_queue_map: Optional[Dict[str, float]] = None
+                    w_queue_map: Optional[Dict[str, float]] = None,
+                    charge: bool = False
                     ) -> List[RouterDecision]:
-        """Route a batch of requests against one telemetry snapshot.
+        """Route a batch of requests; returns one decision per request.
 
         ``w_queue_fn`` maps a model name to its estimated queue wait
         (ms) *now*; when omitted in queue-aware mode the store's own
         EWMA queue telemetry is used.  ``w_queue_map`` hands over the
         whole snapshot at once — a complete name -> wait mapping of
-        clamped non-negative floats (the engine computes each replica's
-        wait exactly once per batch and passes it here, skipping the
-        per-model query round).  All requests in the batch see the same
-        snapshot — the engine's speculative-lookahead contract.
+        clamped non-negative floats.  By default all requests in the
+        batch see the same snapshot (the historical speculative-lookahead
+        contract); ``charge=True`` switches to intra-batch load charging
+        — each admitted pick's μ is charged to its model's queue before
+        the next request is judged (see :meth:`route_batch_arrays`, the
+        array-native entry this adapter wraps).
         """
         reqs = list(requests)
         if not reqs:
             return []
-        if len(reqs) == 1:
-            # Singleton hot path: one scalar budget, no array churn.
-            budgets = (budget(reqs[0].t_sla_ms, reqs[0].t_input_ms),)
-        else:
-            budgets = np.array([budget(r.t_sla_ms, r.t_input_ms)
-                                for r in reqs])
+        res = self.route_batch_arrays(
+            [r.t_sla_ms for r in reqs], [r.t_input_ms for r in reqs], rng,
+            w_queue_fn=w_queue_fn, w_queue_map=w_queue_map,
+            depth_fn=depth_fn, charge=charge, _requests=reqs)
+        decisions: List[RouterDecision] = []
+        traces = res.traces or [None] * len(reqs)
+        for i, req in enumerate(reqs):
+            bd = BudgetBreakdown(t_sla_ms=req.t_sla_ms,
+                                 t_network_ms=2.0 * req.t_input_ms,
+                                 w_queue_ms=float(res.w_queue_ms[i]))
+            if res.admitted[i]:
+                decisions.append(RouterDecision(
+                    request=req, variant=res.names[int(res.model_idx[i])],
+                    admitted=True, budget=bd, trace=traces[i]))
+            else:
+                decisions.append(RouterDecision(
+                    request=req, variant="", admitted=False,
+                    reject_reason=res.reason_of(i), budget=bd))
+        return decisions
 
+    # ------------------------------------------------------------------
+    # array-native core
+    # ------------------------------------------------------------------
+    def route_batch_arrays(self, t_sla_ms, t_input_ms,
+                           rng: np.random.Generator, *,
+                           sla_class: Optional[Sequence[Optional[str]]] = None,
+                           charged: Optional[ChargedWaits] = None,
+                           w_queue_map: Optional[Dict[str, float]] = None,
+                           w_queue_fn: Optional[WQueueFn] = None,
+                           depth_fn: Optional[DepthFn] = None,
+                           charge: bool = True,
+                           _requests: Optional[Sequence[InferenceRequest]]
+                           = None) -> BatchDecisions:
+        """Array-in/array-out routing: the hot-path entry point.
+
+        ``t_sla_ms`` / ``t_input_ms``: (B,) per-request columns (the
+        budget is ``T_sla − 2·T_input`` per row); ``sla_class``: optional
+        (B,) label column consumed by class-aware admission.  Wait
+        telemetry, in precedence order: ``charged`` (a live
+        :class:`ChargedWaits` replica-column state — required for true
+        per-replica charging and placement), ``w_queue_map`` (frozen
+        name → wait snapshot), ``w_queue_fn``, the store's EWMA.
+
+        With ``charge=True`` (default) and more than one request, the
+        batch is routed sequentially-greedily against the charged waits;
+        a snapshot-only wait source is promoted to model-granularity
+        pseudo-replica charging.  A batch of one always rides the
+        scalar path, bit-identical to :meth:`route` — charging cannot
+        perturb it (there is nothing within the batch to charge
+        against).
+
+        Returns a :class:`BatchDecisions` column set.  No per-request
+        objects are created unless a non-trivial admission controller
+        needs a request record to judge (``_requests`` lets the object
+        adapter pass the real ones through).
+        """
+        t_sla = np.asarray(t_sla_ms, dtype=np.float64)
+        t_input = np.asarray(t_input_ms, dtype=np.float64)
+        B = len(t_sla)
+        tab = self.store.table()
+        want_traces = _requests is not None
+        res = BatchDecisions.empty(B, tab.names, traces=want_traces)
+        if B == 0:
+            return res
+
+        # -- resolve the wait telemetry once per batch ------------------
         needs_waits = self.queue_aware or self.admission.needs_w_queue
+        state: Optional[ChargedWaits] = None
         waits: Optional[Dict[str, float]] = None
         if needs_waits:
-            if w_queue_map is not None:
+            if charged is not None:
+                state = charged
+            elif w_queue_map is not None:
                 waits = w_queue_map
             else:
                 # No injected snapshot: query per model, falling back to
@@ -125,66 +223,298 @@ class Router:
                 fn = w_queue_fn or self.store.queue_wait
                 waits = {n: max(0.0, float(fn(n)))
                          for n in self.store.profiles}
-        w_fn = waits.__getitem__ if waits is not None else None
 
+        if B == 1:
+            self._route_singleton(
+                res, float(t_sla[0]), float(t_input[0]), rng, state, waits,
+                depth_fn,
+                _requests[0] if _requests is not None else None,
+                sla_class[0] if sla_class is not None else None)
+        elif charge and needs_waits:
+            if state is None:
+                # Snapshot-only telemetry: charge at model granularity
+                # (each model its own queue — the per-model-endpoint
+                # topology) so the fix does not require a replica pool.
+                state = ChargedWaits.per_model(
+                    tab.names, [waits[n] for n in tab.names], tab.mu)
+            self._route_charged(res, t_sla, t_input, rng, state, depth_fn,
+                                _requests, sla_class)
+        else:
+            self._route_snapshot(res, t_sla, t_input, rng,
+                                 state.as_map() if state is not None
+                                 else waits,
+                                 depth_fn, _requests, sla_class)
+
+        self.n_batches += 1
+        self.n_routed += B
+        n_admitted = int(res.admitted.sum())
+        self.n_admitted += n_admitted
+        self.n_shed += B - n_admitted
+        return res
+
+    # ------------------------------------------------------------------
+    def _admission_request(self, requests, sla_class, i,
+                           t_sla: float, t_input: float) -> InferenceRequest:
+        if requests is not None:
+            return requests[i]
+        return InferenceRequest(
+            t_sla_ms=t_sla, t_input_ms=t_input, rid=i,
+            sla_class=sla_class[i] if sla_class is not None else None)
+
+    def _shed(self, res: BatchDecisions, i: int, reason: str,
+              w_min: float) -> None:
+        try:
+            code = res.reasons.index(reason)
+        except ValueError:
+            code = len(res.reasons)
+            res.reasons.append(reason)
+        res.reject_code[i] = code
+        res.w_queue_ms[i] = w_min
+
+    def _route_scalar(self, t_sla, t_input, rng, waits, depth_fn,
+                      request, cls):
+        """The scalar core — draw-for-draw identical to the historical
+        per-request call sites (python-float budget math, one shifted
+        view, ``select_traced``/``select_lean``).  Returns
+        ``(mid, fallback, w_queue_ms, reason, trace)`` with ``mid == -1``
+        (and the shed reason) when admission rejects."""
+        b0 = budget(t_sla, t_input)
+        w_fn = waits.__getitem__ if waits is not None else None
+        if not self._admits_all:
+            req = (request if request is not None else
+                   self._admission_request(None, (cls,), 0, t_sla, t_input))
+            ok, reason = self.admission.admit(req, b0, self.store.table(),
+                                              w_fn, depth_fn)
+            if not ok:
+                return (-1, False,
+                        min(waits.values()) if waits else 0.0, reason, None)
+        # ``waits`` is already the clamped per-batch snapshot, so the
+        # shifted view reuses it instead of re-querying.
+        sel_store = (shifted_store(self.store, w_fn, shifts=waits)
+                     if (self.queue_aware and w_fn is not None)
+                     else self.store)
+        select = (self.policy.select_traced if self.trace_detail
+                  else self.policy.select_lean)
+        trace = select(sel_store, b0, rng)
+        self.store.mark_selected(trace.chosen)
+        mid = self.store.table().index[trace.chosen]
+        return (mid, trace.fallback,
+                waits[trace.chosen] if waits else 0.0, None, trace)
+
+    def route_one(self, t_sla_ms: float, t_input_ms: float,
+                  rng: np.random.Generator, *,
+                  w_queue_map: Optional[Dict[str, float]] = None,
+                  w_queue_fn: Optional[WQueueFn] = None,
+                  depth_fn: Optional[DepthFn] = None,
+                  sla_class: Optional[str] = None):
+        """Scalar fast path for hot event loops: one request in, a plain
+        ``(model_idx, fallback, w_queue_ms, reject_reason)`` tuple out —
+        no column set, no per-request objects.  ``model_idx == -1``
+        means shed.  Same floats, same RNG draws as a batch of one
+        through :meth:`route_batch_arrays` (which allocates a
+        :class:`BatchDecisions` the caller of a singleton batch rarely
+        wants — the engine's continuous-arrival runs are ~all singleton
+        batches)."""
+        waits = None
+        if self.queue_aware or self.admission.needs_w_queue:
+            if w_queue_map is not None:
+                waits = w_queue_map
+            else:
+                fn = w_queue_fn or self.store.queue_wait
+                waits = {n: max(0.0, float(fn(n)))
+                         for n in self.store.profiles}
+        mid, fb, w_q, reason, _ = self._route_scalar(
+            float(t_sla_ms), float(t_input_ms), rng, waits, depth_fn,
+            None, sla_class)
+        self.n_batches += 1
+        self.n_routed += 1
+        if mid < 0:
+            self.n_shed += 1
+        else:
+            self.n_admitted += 1
+            if fb:
+                self.n_fallback += 1
+        return mid, fb, w_q, reason
+
+    def _route_singleton(self, res, t_sla, t_input, rng, state, waits,
+                         depth_fn, request, cls) -> None:
+        """Batch-of-one adapter over :meth:`_route_scalar` writing into
+        a :class:`BatchDecisions` column set."""
+        if state is not None:
+            waits = state.as_map()
+        mid, fb, w_q, reason, trace = self._route_scalar(
+            t_sla, t_input, rng, waits, depth_fn, request, cls)
+        if mid < 0:
+            self._shed(res, 0, reason, w_q)
+            return
+        res.model_idx[0] = mid
+        res.admitted[0] = True
+        res.fallback[0] = fb
+        res.w_queue_ms[0] = w_q
+        if fb:
+            self.n_fallback += 1
+        if res.traces is not None:
+            res.traces[0] = trace
+
+    def _route_snapshot(self, res, t_sla, t_input, rng, waits, depth_fn,
+                        requests, sla_class) -> None:
+        """The historical one-snapshot batch: every request judged and
+        selected against the same waits (speculative-lookahead
+        contract; the ``snapshot`` ablation arm)."""
+        B = len(t_sla)
+        budgets = t_sla - 2.0 * t_input
         tab = self.store.table()
-        decisions: List[Optional[RouterDecision]] = [None] * len(reqs)
+        w_fn = waits.__getitem__ if waits is not None else None
         if self._admits_all:
             # The base no-op verdict: skip the per-request call.
-            admitted = list(range(len(reqs)))
+            admitted = list(range(B))
         else:
             admitted = []
-            for i, req in enumerate(reqs):
+            w_min = min(waits.values()) if waits else 0.0
+            for i in range(B):
+                req = self._admission_request(requests, sla_class, i,
+                                              float(t_sla[i]),
+                                              float(t_input[i]))
                 ok, reason = self.admission.admit(req, float(budgets[i]),
                                                   tab, w_fn, depth_fn)
                 if ok:
                     admitted.append(i)
                 else:
-                    decisions[i] = RouterDecision(
-                        request=req, variant="", admitted=False,
-                        reject_reason=reason,
-                        budget=BudgetBreakdown(
-                            t_sla_ms=req.t_sla_ms,
-                            t_network_ms=2.0 * req.t_input_ms,
-                            w_queue_ms=min(waits.values()) if waits else 0.0))
+                    self._shed(res, i, reason, w_min)
+        if not admitted:
+            return
+        # ``waits`` is already the clamped per-batch snapshot, so the
+        # shifted view reuses it instead of re-querying.
+        sel_store = (shifted_store(self.store, w_fn, shifts=waits)
+                     if (self.queue_aware and w_fn is not None)
+                     else self.store)
+        if len(admitted) == 1:
+            # Scalar path: draw-for-draw identical to a historical
+            # per-request ``select_traced`` call site.  Without trace
+            # detail the lean core skips the eligible/probs tuple
+            # materialisation — same stages, same RNG stream.
+            i = admitted[0]
+            select = (self.policy.select_traced if self.trace_detail
+                      else self.policy.select_lean)
+            traces = [select(sel_store, float(budgets[i]), rng)]
+        else:
+            traces = policy_vec.select_batch_traced(
+                self.policy, sel_store, budgets[admitted], rng,
+                backend=self.backend, detail=self.trace_detail)
+        for i, trace in zip(admitted, traces):
+            self.store.mark_selected(trace.chosen)
+            res.model_idx[i] = tab.index[trace.chosen]
+            res.admitted[i] = True
+            res.fallback[i] = trace.fallback
+            res.w_queue_ms[i] = waits[trace.chosen] if waits else 0.0
+            if trace.fallback:
+                self.n_fallback += 1
+            if res.traces is not None:
+                res.traces[i] = trace
 
-        if admitted:
-            # ``waits`` is already the clamped per-batch snapshot, so
-            # the shifted view reuses it instead of re-querying.
-            sel_store = (shifted_store(self.store, w_fn, shifts=waits)
-                         if (self.queue_aware and w_fn is not None)
-                         else self.store)
-            if len(admitted) == 1:
-                # Scalar path: draw-for-draw identical to a historical
-                # per-request ``select_traced`` call site.  Without
-                # trace detail the lean core skips the eligible/probs
-                # tuple materialisation — same stages, same RNG stream.
-                i = admitted[0]
-                select = (self.policy.select_traced if self.trace_detail
-                          else self.policy.select_lean)
-                traces = [select(sel_store, float(budgets[i]), rng)]
-            else:
-                traces = policy_vec.select_batch_traced(
-                    self.policy, sel_store, budgets[admitted], rng,
-                    backend=self.backend, detail=self.trace_detail)
-            for i, trace in zip(admitted, traces):
-                self.store.mark_selected(trace.chosen)
-                req = reqs[i]
-                decisions[i] = RouterDecision(
-                    request=req, variant=trace.chosen, admitted=True,
-                    budget=BudgetBreakdown(
-                        t_sla_ms=req.t_sla_ms,
-                        t_network_ms=2.0 * req.t_input_ms,
-                        w_queue_ms=waits[trace.chosen] if waits else 0.0),
-                    trace=trace)
-                if trace.fallback:
-                    self.n_fallback += 1
+    def _route_charged(self, res, t_sla, t_input, rng, state: ChargedWaits,
+                       depth_fn, requests, sla_class) -> None:
+        """Sequential-greedy charged routing: request ``i`` is admitted
+        and selected against waits that already include the charges of
+        requests ``0..i-1`` — pick-for-pick what B sequential singleton
+        ``route`` calls with live wait updates would produce."""
+        B = len(t_sla)
+        budgets = t_sla - 2.0 * t_input
+        tab = self.store.table()
+        if self._use_charged_scan(B):
+            self._route_charged_jax(res, budgets, rng, state)
+            return
+        names = tab.names
+        index = tab.index
+        select = (self.policy.select_traced if self.trace_detail
+                  else self.policy.select_lean)
+        check_admission = not self._admits_all
+        for i in range(B):
+            wq = state.model_waits()
+            # The live charged snapshot this request is judged against —
+            # same keys, same clamped floats a singleton route would
+            # build, but including every charge so far.
+            waits = dict(zip(names, wq.tolist()))
+            if check_admission:
+                req = self._admission_request(requests, sla_class, i,
+                                              float(t_sla[i]),
+                                              float(t_input[i]))
+                ok, reason = self.admission.admit(
+                    req, float(budgets[i]), tab, waits.__getitem__,
+                    depth_fn)
+                if not ok:
+                    self._shed(res, i, reason, float(wq.min()))
+                    continue
+            sel_store = (shifted_store(self.store, waits.__getitem__,
+                                       shifts=waits)
+                         if self.queue_aware else self.store)
+            trace = select(sel_store, float(budgets[i]), rng)
+            self.store.mark_selected(trace.chosen)
+            mid = index[trace.chosen]
+            res.model_idx[i] = mid
+            res.admitted[i] = True
+            res.fallback[i] = trace.fallback
+            res.w_queue_ms[i] = float(wq[mid])
+            if trace.fallback:
+                self.n_fallback += 1
+            if res.traces is not None:
+                res.traces[i] = trace
+            # Charge the pick before the next request is judged; the
+            # returned replica is where a placement-consistent caller
+            # should enqueue it.
+            ridx = state.charge(mid)
+            if not state.pseudo:
+                res.replica_idx[i] = ridx
 
-        self.n_batches += 1
-        self.n_routed += len(reqs)
-        self.n_admitted += len(admitted)
-        self.n_shed += len(reqs) - len(admitted)
-        return decisions
+    # -- device path ---------------------------------------------------
+    def _use_charged_scan(self, B: int) -> bool:
+        """The ``lax.scan`` charged pass engages under the same backend
+        policy as the uncharged fused pipeline (ModiPick, large batch or
+        an explicit jax backend), for controllers whose verdict is the
+        pure viability test the kernel can evaluate in-scan."""
+        if type(self.policy) is not ModiPick or not self.queue_aware \
+                or self.trace_detail:
+            return False
+        if not (self._admits_all
+                or type(self.admission) is SlaAwareAdmission):
+            return False
+        return policy_vec.resolve_backend(self.backend, B) == "jax"
+
+    def _route_charged_jax(self, res, budgets, rng,
+                           state: ChargedWaits) -> None:
+        from repro.kernels import policy_select
+        adm = self.admission
+        if self._admits_all:
+            adm_limit, slack, include_mu = None, 0.0, False
+        else:
+            adm_limit = budgets
+            slack = adm.slack_ms
+            include_mu = adm.include_service_time
+        tab = self.store.table()
+        out = policy_select.charged_select(
+            tab.device_pool(), budgets,
+            budgets - self.policy.t_threshold,
+            state, gamma=self.policy.gamma,
+            adm_limit=adm_limit, adm_slack=slack,
+            adm_include_mu=include_mu,
+            seed=int(rng.integers(np.iinfo(np.int64).max)))
+        picks, admitted, has_base, replica, w_chosen = out
+        names = tab.names
+        for i in range(len(budgets)):
+            if not admitted[i]:
+                self._shed(res, i,
+                           "W_queue exceeds the remaining budget for "
+                           "every model", float(w_chosen[i]))
+                continue
+            mid = int(picks[i])
+            self.store.mark_selected(names[mid])
+            res.model_idx[i] = mid
+            res.admitted[i] = True
+            res.fallback[i] = not has_base[i]
+            res.w_queue_ms[i] = float(w_chosen[i])
+            if not state.pseudo:
+                res.replica_idx[i] = int(replica[i])
+        self.n_fallback += int((res.admitted & res.fallback).sum())
 
     # ------------------------------------------------------------------
     def observe(self, name: str, latency_ms: float) -> None:

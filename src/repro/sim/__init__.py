@@ -15,13 +15,14 @@ Paper-section → code map:
   the paper's single-request loop cannot express.
 - §3.2 Eq. 1 budget ``T_sla - 2*T_input``: ``core.policy.budget``;
   the queue-aware generalisation ``T_sla - 2*T_input - W_queue(m)`` is
-  ``repro.router.queueaware`` (re-exported here for compatibility).
+  ``repro.router.queueaware``.
 - §3.3 three-stage selection + EWMA profiles + cold-model refresh:
   unchanged in ``core.policy`` / ``core.profiles``; the engine feeds
   observed inference latency and queue waits back into the store.
 - Request routing — admission, budget math, selection — is the unified
   ``repro.router.Router``; the engine groups same-timestamp ENQUEUEs
-  (plus an optional lookahead window) into one ``route_batch`` call.
+  (plus an optional lookahead window) into one ``route_batch_arrays``
+  call with intra-batch load charging (``router.charging``).
 - §4 closed-loop evaluation: ``arrivals.ClosedLoopArrivals`` over a
   single shared replica — ``core.simulate.Simulator`` is now a thin
   wrapper that replays the paper's loop draw-for-draw.

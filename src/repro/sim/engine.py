@@ -9,17 +9,25 @@ At ENQUEUE the engine hands the request to the unified
 ``repro.router.Router`` — admission verdict, budget math and model
 selection all live there.  Consecutive same-timestamp ENQUEUE events
 (plus an optional ``batch_window_ms`` speculative lookahead) are grouped
-into ONE ``route_batch`` call, so the event loop rides the vectorized
-policy path; a singleton batch takes the scalar selection route, which
-is draw-for-draw identical to the historical per-request call — seeded
-runs with continuous (never-colliding) event times are bit-identical to
-the pre-router engine.  Queue-aware mode presents the policy with
-per-model budgets ``T_sla - 2*T_input - W_queue(m)`` via the router's
-shifted store view.  The admitted request joins the FIFO of the
-least-loaded capable replica, and — exactly like the live serving path —
-the profile store receives the *inference* latency at FINISH and the
-observed queue wait at service start (telemetry mirroring
-``serving/batcher.py``).
+into ONE ``route_batch_arrays`` call: budget/class columns in, decision
+columns out, no per-request objects on the hot path.  A singleton batch
+takes the scalar selection route, which is draw-for-draw identical to
+the historical per-request call — seeded runs with continuous
+(never-colliding) event times are bit-identical to the pre-router
+engine.  Multi-request batches are routed with intra-batch load
+charging by default (``charge_batches=True``): the engine hands the
+router its live per-replica wait columns
+(``ReplicaPool.charged_state``) and each admitted pick's μ is charged
+to its chosen replica before the next request of the batch is judged,
+so simultaneous bursts spread across the pool instead of piling onto
+one stale-idle model; the charged replica is also where the engine
+places the request.  ``charge_batches=False`` restores the historical
+one-frozen-snapshot batch semantics.  Queue-aware mode presents the
+policy with per-model budgets ``T_sla - 2*T_input - W_queue(m)`` via
+the router's shifted store view.  The admitted request joins the FIFO
+of its replica, and — exactly like the live serving path — the profile
+store receives the *inference* latency at FINISH and the observed queue
+wait at service start (telemetry mirroring ``serving/batcher.py``).
 
 Hot-path representation (the million-request regime): per-request state
 lives in preallocated structure-of-arrays columns indexed by request id
@@ -52,7 +60,7 @@ from repro.core.netmodel import NetworkModel
 from repro.core.policy import Policy
 from repro.core.profiles import ProfileStore
 from repro.core.zoo import ZooEntry, make_store, true_profiles
-from repro.router import AdmissionController, InferenceRequest, Router
+from repro.router import AdmissionController, Router
 from repro.sim.arrivals import ArrivalProcess, ClosedLoopArrivals
 from repro.sim.events import ARRIVAL, DEPART, ENQUEUE, FINISH, EventQueue
 from repro.sim.replica import (GaussianServiceModel, Replica, ReplicaPool,
@@ -155,7 +163,8 @@ class ServingSimulator:
                  spike_mult: float = 10.0, queue_aware: bool = False,
                  admission: Optional[AdmissionController] = None,
                  batch_window_ms: float = 0.0,
-                 backend: Optional[str] = None):
+                 backend: Optional[str] = None,
+                 charge_batches: bool = True):
         self.entries = list(entries)
         self.network = network
         if replicas is None:
@@ -178,6 +187,13 @@ class ServingSimulator:
         # timestamp ties (simultaneous arrivals), which keeps runs with
         # continuous event times bit-identical to per-request routing.
         self.batch_window_ms = batch_window_ms
+        # Intra-batch load charging (default): each admitted pick's μ is
+        # charged to its chosen replica before the next request of the
+        # batch is judged, so simultaneous bursts don't pile onto one
+        # idle-looking model off a stale W_queue snapshot.  False keeps
+        # the historical one-snapshot batch semantics (the ablation
+        # baseline, and the mode pinned by pre-charging goldens).
+        self.charge_batches = charge_batches
         self.router: Optional[Router] = None  # built per run()
         # Post-run SoA state (lazy SimRequest materialization).
         self._cols: Optional[_Columns] = None
@@ -349,31 +365,79 @@ class ServingSimulator:
                     nxt = evq.pop()
                     enq_c[nxt.data] = nxt.time
                     batch.append(nxt.data)
-                # One W_queue snapshot per batch: every replica's wait
-                # computed exactly once, handed to the router whole.
-                waits = (self.pool.waits_by_name(now, store)
-                         if needs_waits else None)
-                decisions = router.route_batch(
-                    [InferenceRequest(rid=r, arrival_ms=arrival_c[r],
-                                      t_sla_ms=t_sla_c[r],
-                                      t_input_ms=t_input_c[r],
-                                      sla_class=class_names[cls_c[r]])
-                     for r in batch],
-                    rng,
-                    w_queue_map=waits,
+                # One charged-wait state per batch: every replica's wait
+                # computed exactly once, handed to the router as live
+                # per-replica columns (the router charges each admitted
+                # pick's μ into it before judging the next request).
+                # A batch of one has nothing within it to charge — and
+                # uncharged batches judge one frozen snapshot — so both
+                # take the cheap name->wait map instead of building a
+                # per-replica ledger (the singleton path dominates
+                # continuous-arrival runs; keep it allocation-lean).
+                state = w_map = None
+                if needs_waits:
+                    if self.charge_batches and len(batch) > 1:
+                        state = self.pool.charged_state(now)
+                    else:
+                        w_map = self.pool.waits_by_name(now, store)
+                if len(batch) == 1:
+                    # Scalar fast path: tuple out, no BatchDecisions
+                    # column set allocated per request (continuous
+                    # arrivals make every batch a singleton, ~1M/run).
+                    mid, fb, _w, reason = router.route_one(
+                        t_sla_c[rid], t_input_c[rid], rng,
+                        w_queue_map=w_map,
+                        sla_class=(None if router._admits_all else
+                                   class_names[cls_c[rid]]),
+                        depth_fn=lambda m: min(r.depth() for r in
+                                               self.pool.candidates(m)))
+                    if mid < 0:
+                        reject(rid, reason, enq_c[rid], now)
+                        continue
+                    model_c[rid] = mid
+                    fallback_c[rid] = fb
+                    replica = self.pool.best_for(names[mid], now, store)
+                    replica_c[rid] = replica_index[id(replica)]
+                    if replica.full():
+                        reject(rid, "replica queue full", now, now)
+                        continue
+                    replica.enqueue(rid, mid)
+                    depth = replica.depth()
+                    if depth > replica.peak_depth:
+                        replica.peak_depth = depth
+                    if replica.current is None:
+                        start_service(replica, now)
+                    continue
+                # Array-in/array-out routing: budget/class columns in,
+                # decision columns out — no per-request objects.
+                res = router.route_batch_arrays(
+                    t_sla_c[batch], t_input_c[batch], rng,
+                    sla_class=(None if router._admits_all else
+                               [class_names[cls_c[r]] for r in batch]),
+                    charged=state, w_queue_map=w_map,
                     depth_fn=lambda m: min(r.depth() for r in
-                                           self.pool.candidates(m)))
-                for rid, dec in zip(batch, decisions):
-                    if not dec.admitted:
+                                           self.pool.candidates(m)),
+                    charge=self.charge_batches)
+                pool_replicas = self.pool.replicas
+                for j, rid in enumerate(batch):
+                    if not res.admitted[j]:
                         # Router-side shed: no selection spent, no
                         # replica touched.
-                        reject(rid, dec.reject_reason, enq_c[rid], now)
+                        reject(rid, res.reason_of(j), enq_c[rid], now)
                         continue
-                    mid = model_ids[dec.variant]
+                    mid = int(res.model_idx[j])
                     model_c[rid] = mid
-                    fallback_c[rid] = dec.fallback
-                    replica = self.pool.best_for(dec.variant, now, store)
-                    replica_c[rid] = replica_index[id(replica)]
+                    fallback_c[rid] = res.fallback[j]
+                    ridx = int(res.replica_idx[j])
+                    if ridx >= 0:
+                        # Charged placement: the replica the router's
+                        # ledger charged this pick to.
+                        replica = pool_replicas[ridx]
+                    else:
+                        replica = self.pool.best_for(names[mid], now,
+                                                     store)
+                        ridx = replica_index[id(replica)]
+                    replica_c[rid] = ridx
                     if replica.full():
                         # == now without lookahead; a speculatively-routed
                         # request cannot depart before its own enqueue.

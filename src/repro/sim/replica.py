@@ -34,6 +34,7 @@ import numpy as np
 
 from repro.core.profiles import ProfileStore
 from repro.core.zoo import ZooEntry
+from repro.router.charging import ChargedWaits
 
 # Queue depth up to which the wait estimate walks the FIFO element by
 # element (bit-identical to the historical per-object walk); deeper
@@ -153,6 +154,12 @@ class ReplicaPool:
         # per-call scan.
         self._cands: Optional[Dict[str, List[Replica]]] = None
         self._cand_idx: Optional[Dict[str, List[int]]] = None
+        # Charged-state caches (bind()): model order, candidate index
+        # arrays in that order, the speed column, the live μ list.
+        self._names: Optional[Tuple[str, ...]] = None
+        self._cand_arrays: Optional[List[np.ndarray]] = None
+        self._speeds: Optional[np.ndarray] = None
+        self._mu_now: Optional[List[float]] = None
 
     def bind(self, model_names: Sequence[str], model_of: Sequence[int],
              mu_now: List[float]) -> None:
@@ -175,6 +182,11 @@ class ReplicaPool:
                 raise KeyError(f"no replica serves model {name!r}")
             self._cands[name] = [self.replicas[i] for i in ix]
             self._cand_idx[name] = ix
+        self._names = tuple(model_names)
+        self._cand_arrays = [np.asarray(self._cand_idx[n], dtype=np.int64)
+                             for n in model_names]
+        self._speeds = np.array([r.speed for r in self.replicas])
+        self._mu_now = mu_now
 
     def candidates(self, model: str) -> List[Replica]:
         if self._cands is not None:
@@ -201,15 +213,13 @@ class ReplicaPool:
         return min(r.estimated_wait(now, store)
                    for r in self.candidates(model))
 
-    def waits_by_name(self, now: float, store: ProfileStore
-                      ) -> Dict[str, float]:
-        """One routing snapshot: every replica's wait computed exactly
-        once (the estimate inlined — same ops, same floats as
-        ``estimated_wait``), then reduced per model over its cached
-        candidate indices — what ``queue_wait`` would produce per
-        model, without re-walking shared queues once per pool member.
+    def wait_columns(self, now: float) -> List[float]:
+        """Every replica's wait estimate computed exactly once (the
+        estimate inlined — same ops, same floats as ``estimated_wait``)
+        — the per-replica column behind both the frozen
+        ``waits_by_name`` snapshot and the live ``charged_state``.
         Requires ``bind()`` (the engine's per-run setup)."""
-        assert self._cands is not None, "waits_by_name requires bind()"
+        assert self._cands is not None, "wait_columns requires bind()"
         ws = []
         for r in self.replicas:
             w = max(0.0, r.busy_until - now) if r.current is not None \
@@ -226,6 +236,26 @@ class ReplicaPool:
                         if c:
                             w += c * (mu[m] / s)
             ws.append(w)
+        return ws
+
+    def charged_state(self, now: float) -> ChargedWaits:
+        """The intra-batch charging ledger for one routing batch:
+        per-replica wait columns plus the bind-frozen candidate
+        topology, speeds and the engine's live μ list — the same floats
+        ``waits_by_name`` reduces into its frozen dict, but mutable, so
+        the router can charge each admitted pick before judging the
+        next request of the batch."""
+        assert self._cand_arrays is not None, "charged_state requires bind()"
+        return ChargedWaits(self.wait_columns(now), self._cand_arrays,
+                            self._speeds, self._mu_now, self._names)
+
+    def waits_by_name(self, now: float, store: ProfileStore
+                      ) -> Dict[str, float]:
+        """One frozen routing snapshot: :meth:`wait_columns` reduced per
+        model over its cached candidate indices — what ``queue_wait``
+        would produce per model, without re-walking shared queues once
+        per pool member.  Requires ``bind()``."""
+        ws = self.wait_columns(now)
         out = {}
         for m, ix in self._cand_idx.items():
             w = ws[ix[0]]
@@ -240,6 +270,10 @@ class ReplicaPool:
             r.reset()
         self._cands = None
         self._cand_idx = None
+        self._names = None
+        self._cand_arrays = None
+        self._speeds = None
+        self._mu_now = None
 
 
 def shared_replicas(n: int = 1, *, speeds: Optional[List[float]] = None,

@@ -1,0 +1,347 @@
+"""Intra-batch load charging (the batched-routing staleness fix).
+
+Covers, in order:
+
+- the oracle property: a charged ``route_batch`` over a batch of B is
+  pick-for-pick equal to B sequential singleton ``route`` calls with
+  the queue waits updated between calls — the singleton path is the
+  trusted scalar oracle, so the charged batch inherits its semantics;
+- honest admission under bursts: the regression the bench exposed
+  (``shed=0`` while attainment sat at 0.16) — ``SlaAwareAdmission``
+  judged against charged waits sheds what cannot be served, and the
+  engine's attainment recovers;
+- the array-native ``route_batch_arrays`` column contract;
+- the ``lax.scan`` charged kernel (forced jax backend) against the
+  numpy sequential loop on a deterministic single-model pool, plus
+  multi-model sanity.
+"""
+import numpy as np
+import pytest
+
+from repro.core.netmodel import NetworkModel
+from repro.core.policy import ModiPick
+from repro.core.profiles import ModelProfile, ProfileStore
+from repro.core.zoo import TABLE2
+from repro.router import (ChargedWaits, InferenceRequest, Router,
+                          SlaAwareAdmission)
+from repro.router.api import BatchDecisions
+from repro.sim import ServingSimulator, TraceArrivals, per_model_replicas
+
+
+def _random_store(rng, n):
+    ps = []
+    for i in range(n):
+        p = ModelProfile(name=f"m{i}", accuracy=float(rng.uniform(0.05, 1.0)))
+        p.mu = float(rng.uniform(5, 120))
+        p.var = float(rng.uniform(0, 10)) ** 2
+        p.n_obs = 50
+        ps.append(p)
+    return ProfileStore(ps)
+
+
+def _burst(n, width, every_ms):
+    bursts = -(-n // width)
+    return TraceArrivals(np.repeat(np.arange(bursts) * every_ms, width)[:n])
+
+
+# ----------------------------------------------------------------------
+# the oracle property: charged batch == sequential singletons
+# ----------------------------------------------------------------------
+
+def test_charged_batch_equals_sequential_singleton_oracle():
+    """Charged ``route_batch`` over B requests must be pick-for-pick
+    (and shed-for-shed, and reported-wait-for-reported-wait) what B
+    singleton ``route`` calls produce when the caller charges the queue
+    waits between calls — over randomized pools, budgets, initial
+    waits, and with/without SLA-aware admission."""
+    meta = np.random.default_rng(99)
+    for trial in range(25):
+        n = int(meta.integers(2, 9))
+        B = int(meta.integers(2, 17))
+        seed = int(meta.integers(1 << 30))
+        store_a = _random_store(np.random.default_rng(seed), n)
+        store_b = _random_store(np.random.default_rng(seed), n)
+        adm = SlaAwareAdmission() if trial % 2 else None
+        policy = ModiPick(t_threshold=float(meta.uniform(0, 40)))
+        kw = dict(admission=adm, queue_aware=True)
+        router_a = Router(store_a, policy, **kw)
+        router_b = Router(store_b, policy, **kw)
+        waits0 = {f"m{i}": float(meta.uniform(0, 60)) for i in range(n)}
+        reqs = [InferenceRequest(t_sla_ms=float(meta.uniform(40, 400)),
+                                 t_input_ms=float(meta.uniform(0, 30)),
+                                 rid=i)
+                for i in range(B)]
+
+        rng_a = np.random.default_rng(seed + 1)
+        decs = router_a.route_batch(reqs, rng_a, w_queue_map=dict(waits0),
+                                    charge=True)
+
+        # The trusted oracle: singleton routes with the wait map charged
+        # by the caller after every admitted pick (model-granularity
+        # queues, μ from the table — exactly what per-model charging
+        # models).
+        rng_b = np.random.default_rng(seed + 1)
+        tab = store_b.table()
+        mu_of = dict(zip(tab.names, (float(m) for m in tab.mu)))
+        waits = {k: max(0.0, v) for k, v in waits0.items()}
+        for req, dec in zip(reqs, decs):
+            ora = router_b.route(req, rng_b, w_queue_fn=waits.__getitem__)
+            assert ora.admitted == dec.admitted, (trial, req.rid)
+            assert ora.budget.w_queue_ms == dec.budget.w_queue_ms
+            if not ora.admitted:
+                assert ora.reject_reason == dec.reject_reason
+                continue
+            assert ora.variant == dec.variant, (trial, req.rid)
+            assert ora.fallback == dec.fallback
+            waits[ora.variant] += mu_of[ora.variant]
+        # identical residual RNG state: same number and kind of draws
+        assert rng_a.random() == rng_b.random()
+
+
+def test_charge_false_keeps_one_snapshot_semantics():
+    """``charge=False`` (the object-path default) must keep the
+    historical contract: every request judged against the same frozen
+    snapshot, batched vectorized selection."""
+    store = _random_store(np.random.default_rng(5), 6)
+    router = Router(store, ModiPick(t_threshold=20.0), queue_aware=True)
+    reqs = [InferenceRequest(t_sla_ms=300.0, t_input_ms=10.0, rid=i)
+            for i in range(8)]
+    waits = {f"m{i}": 5.0 * i for i in range(6)}
+    decs = router.route_batch(reqs, np.random.default_rng(0),
+                              w_queue_map=waits)
+    # all decisions report the wait of their chosen model from the ONE
+    # snapshot — no charges appear anywhere
+    for d in decs:
+        assert d.admitted
+        assert d.budget.w_queue_ms == waits[d.variant]
+
+
+# ----------------------------------------------------------------------
+# honest admission under bursts (the bench regression)
+# ----------------------------------------------------------------------
+
+def test_admission_sheds_honestly_under_burst():
+    """The regression the throughput bench exposed: under 400-wide
+    bursts on the per-model topology, snapshot routing reports shed=0
+    while attainment collapses (every request is judged against the
+    same idle-looking pool); charged routing both sheds the requests no
+    model can serve in budget AND recovers attainment for the rest."""
+    def run(charge):
+        sim = ServingSimulator(
+            TABLE2, NetworkModel(50.0, 0.0), per_model_replicas(TABLE2),
+            seed=3, queue_aware=True, admission=SlaAwareAdmission(),
+            charge_batches=charge)
+        r = sim.run(ModiPick(t_threshold=20.0), 250.0, 800,
+                    arrivals=_burst(800, 400, 2000.0))
+        return r
+
+    snap = run(False)
+    assert snap.n_rejected == 0          # blind to intra-batch load
+    assert snap.sla_attainment < 0.1     # ... and it collapses
+    charged = run(True)
+    assert charged.n_rejected > 0        # shedding is honest now
+    assert charged.sla_attainment > 0.4
+    assert charged.sla_attainment > 10 * snap.sla_attainment
+
+
+def test_burst_attainment_recovers_without_admission():
+    """At sustainable burst load (4 replicas/model, 200-wide bursts —
+    the bench's ``batched`` config at toy scale) charging alone
+    recovers attainment to the singleton regime; the snapshot ablation
+    stays degenerate."""
+    def run(charge):
+        sim = ServingSimulator(
+            TABLE2, NetworkModel(50.0, 0.0),
+            per_model_replicas(TABLE2, replicas_per_model=4),
+            seed=3, queue_aware=True, charge_batches=charge)
+        return sim.run(ModiPick(t_threshold=20.0), 250.0, 2000,
+                       arrivals=_burst(2000, 200, 400.0))
+
+    assert run(False).sla_attainment < 0.3
+    assert run(True).sla_attainment > 0.9
+
+
+# ----------------------------------------------------------------------
+# the array-native entry point
+# ----------------------------------------------------------------------
+
+def test_route_batch_arrays_column_contract():
+    """Columns out of ``route_batch_arrays`` mirror the object path's
+    decisions field for field (same RNG seed → same picks)."""
+    store = _random_store(np.random.default_rng(11), 5)
+    mk = lambda: Router(store, ModiPick(t_threshold=20.0),
+                        admission=SlaAwareAdmission(), queue_aware=True)
+    reqs = [InferenceRequest(t_sla_ms=float(s), t_input_ms=5.0, rid=i)
+            for i, s in enumerate((300.0, 90.0, 250.0, 30.0))]
+    waits = {f"m{i}": 12.5 * i for i in range(5)}
+    decs = mk().route_batch(reqs, np.random.default_rng(7),
+                            w_queue_map=dict(waits), charge=True)
+    res = mk().route_batch_arrays(
+        [r.t_sla_ms for r in reqs], [r.t_input_ms for r in reqs],
+        np.random.default_rng(7), w_queue_map=dict(waits), charge=True)
+    assert isinstance(res, BatchDecisions)
+    assert len(res) == len(reqs)
+    for i, d in enumerate(decs):
+        assert bool(res.admitted[i]) == d.admitted
+        if d.admitted:
+            assert res.names[int(res.model_idx[i])] == d.variant
+            assert bool(res.fallback[i]) == d.fallback
+        else:
+            assert int(res.model_idx[i]) == -1
+            assert res.reason_of(i) == d.reject_reason
+        assert float(res.w_queue_ms[i]) == d.budget.w_queue_ms
+        # per-model pseudo charging exposes no real replica indices
+        assert int(res.replica_idx[i]) == -1
+
+
+def test_batch_of_one_is_bit_identical_scalar_path():
+    """Charging must not perturb a singleton batch: same picks and RNG
+    consumption as ``route`` whatever the ``charge`` flag says (there
+    is nothing within the batch to charge against)."""
+    store_a = _random_store(np.random.default_rng(3), 6)
+    store_b = _random_store(np.random.default_rng(3), 6)
+    pol = ModiPick(t_threshold=20.0)
+    req = InferenceRequest(t_sla_ms=240.0, t_input_ms=20.0)
+    waits = {f"m{i}": 3.0 * i for i in range(6)}
+    ra, rb = np.random.default_rng(2), np.random.default_rng(2)
+    d1 = Router(store_a, pol, queue_aware=True).route_batch(
+        [req], ra, w_queue_map=waits, charge=True)[0]
+    d2 = Router(store_b, pol, queue_aware=True).route(
+        req, rb, w_queue_fn=waits.__getitem__)
+    assert (d1.variant, d1.fallback) == (d2.variant, d2.fallback)
+    assert d1.budget.w_queue_ms == d2.budget.w_queue_ms
+    assert ra.random() == rb.random()
+
+
+def test_route_one_matches_batch_of_one():
+    """The engine's scalar fast path (``route_one`` tuple out) is
+    pick-for-pick, float-for-float, draw-for-draw and counter-for-
+    counter the same as a batch of one through the array entry point."""
+    store_a = _random_store(np.random.default_rng(8), 5)
+    store_b = _random_store(np.random.default_rng(8), 5)
+    pol = ModiPick(t_threshold=20.0)
+    router_a = Router(store_a, pol, admission=SlaAwareAdmission(),
+                      queue_aware=True)
+    router_b = Router(store_b, pol, admission=SlaAwareAdmission(),
+                      queue_aware=True)
+    ra, rb = np.random.default_rng(4), np.random.default_rng(4)
+    waits = {f"m{i}": 4.0 * i for i in range(5)}
+    for k in range(12):
+        sla = 360.0 - 31.0 * k          # last rows: budget ≤ 0 → shed
+        mid, fb, w_q, reason = router_a.route_one(
+            sla, 10.0, ra, w_queue_map=waits)
+        res = router_b.route_batch_arrays(
+            [sla], [10.0], rb, w_queue_map=dict(waits))
+        assert mid == int(res.model_idx[0])
+        assert bool(res.admitted[0]) == (mid >= 0)
+        if mid >= 0:
+            assert fb == bool(res.fallback[0])
+        else:
+            assert reason == res.reason_of(0)
+        assert w_q == float(res.w_queue_ms[0])
+    assert router_a.stats() == router_b.stats()
+    assert router_a.stats()["n_shed"] > 0
+    assert ra.random() == rb.random()
+
+
+def test_charged_waits_ledger():
+    """ChargedWaits unit semantics: min-over-candidates waits,
+    pool-order tie-break, μ/speed charge amounts."""
+    st = ChargedWaits(rep_wait=[10.0, 0.0, 5.0],
+                      cand=[[0, 1], [1, 2]],
+                      speed=[1.0, 2.0, 1.0],
+                      mu=[30.0, 8.0],
+                      names=("a", "b"))
+    assert st.model_waits().tolist() == [0.0, 0.0]
+    assert st.charge(0) == 1             # least-loaded of {0, 1}
+    assert st.rep_wait[1] == 15.0        # 30 / speed 2
+    assert st.wait_of(0) == 10.0
+    assert st.as_map() == {"a": 10.0, "b": 5.0}
+    assert st.charge(1) == 2             # replica 2 now least of {1, 2}
+    assert st.rep_wait[2] == 13.0
+    with pytest.raises(ValueError, match="no replica serves"):
+        ChargedWaits([0.0], [[]], [1.0], [1.0], ("a",))
+
+
+# ----------------------------------------------------------------------
+# the jax lax.scan charged kernel
+# ----------------------------------------------------------------------
+
+def _one_model_store(mu=50.0):
+    p = ModelProfile(name="m0", accuracy=0.9)
+    p.mu, p.var, p.n_obs = mu, 0.0, 100
+    return ProfileStore([p])
+
+
+@pytest.mark.parametrize("backend", ["numpy", "jax"])
+def test_charged_scan_deterministic_single_model(backend):
+    """One model, two replicas, fixed budgets: the charged pass (numpy
+    sequential loop AND the forced-jax ``lax.scan`` kernel) must admit
+    exactly while ``min-replica wait < budget`` and alternate replicas
+    — a closed-form trajectory with no sampling freedom, so both
+    backends are exactly comparable."""
+    store = _one_model_store(50.0)
+    router = Router(store, ModiPick(t_threshold=20.0),
+                    admission=SlaAwareAdmission(), queue_aware=True,
+                    trace_detail=False, backend=backend)
+    state = ChargedWaits(rep_wait=[0.0, 0.0], cand=[[0, 1]],
+                         speed=[1.0, 1.0], mu=[50.0], names=("m0",))
+    B = 12
+    res = router.route_batch_arrays(
+        np.full(B, 200.0), np.zeros(B), np.random.default_rng(0),
+        charged=state, charge=True)
+    # admits while min(waits) < 200: pairs of picks raise the min by 50
+    # → 8 admitted (min wait 0,0,50,50,100,100,150,150), then shed.
+    assert res.admitted.tolist() == [True] * 8 + [False] * 4
+    assert res.model_idx[:8].tolist() == [0] * 8
+    assert res.replica_idx[:8].tolist() == [0, 1] * 4
+    assert res.w_queue_ms[:8].tolist() == [0.0, 0.0, 50.0, 50.0,
+                                           100.0, 100.0, 150.0, 150.0]
+    assert res.w_queue_ms[8:].tolist() == [200.0] * 4
+    assert all("budget" in res.reason_of(i) for i in range(8, 12))
+    s = router.stats()
+    assert s["n_admitted"] == 8 and s["n_shed"] == 4
+
+
+def test_charged_scan_multimodel_spreads_and_places():
+    """Forced-jax charged scan over a real zoo: picks are valid pool
+    indices, every admitted request lands on a replica that serves its
+    model, and the burst spreads over more than one model (the whole
+    point of charging)."""
+    from repro.core.zoo import make_store
+    store = make_store(TABLE2)
+    router = Router(store, ModiPick(t_threshold=20.0), queue_aware=True,
+                    trace_detail=False, backend="jax")
+    tab = store.table()
+    n = len(tab.names)
+    # per-model topology, 2 replicas each: replica 2*m and 2*m+1 serve m
+    state = ChargedWaits(rep_wait=[0.0] * (2 * n),
+                         cand=[[2 * m, 2 * m + 1] for m in range(n)],
+                         speed=[1.0] * (2 * n),
+                         mu=tab.mu, names=tab.names)
+    B = 256
+    res = router.route_batch_arrays(
+        np.full(B, 250.0), np.full(B, 50.0), np.random.default_rng(1),
+        charged=state, charge=True)
+    assert res.admitted.all()
+    picks = res.model_idx
+    assert ((0 <= picks) & (picks < n)).all()
+    assert len(np.unique(picks)) > 1
+    reps = res.replica_idx
+    assert ((reps == 2 * picks) | (reps == 2 * picks + 1)).all()
+    # the ledger really was charged: total charged mass == Σ μ(pick)
+    expect = sum(float(tab.mu[m]) for m in picks)
+    assert np.sum(state.rep_wait) == 0.0  # jax path never mutates state
+    # and the same call on numpy charges the caller's ledger in place
+    router_np = Router(store, ModiPick(t_threshold=20.0), queue_aware=True,
+                       trace_detail=False, backend="numpy")
+    state2 = ChargedWaits(rep_wait=[0.0] * (2 * n),
+                          cand=[[2 * m, 2 * m + 1] for m in range(n)],
+                          speed=[1.0] * (2 * n),
+                          mu=tab.mu, names=tab.names)
+    res2 = router_np.route_batch_arrays(
+        np.full(B, 250.0), np.full(B, 50.0), np.random.default_rng(1),
+        charged=state2, charge=True)
+    got = float(np.sum(state2.rep_wait))
+    want = sum(float(tab.mu[m]) for m in res2.model_idx)
+    assert got == pytest.approx(want, rel=1e-12)

@@ -37,9 +37,13 @@ PR4_RATE40_PLAIN_RPS = 4013.0    # queue_aware=False
 def test_golden_soa_classes_window_sla_mix_unchanged():
     """Queue-aware run exercising every new column at once — lookahead
     batching, per-request SLA mix, class labels — pinned bit-for-bit to
-    the pre-refactor engine."""
+    the pre-refactor engine.  ``charge_batches=False``: the golden was
+    captured under the historical one-snapshot batch semantics, which
+    is exactly what the knob preserves (intra-batch charging routes
+    lookahead batches sequentially, a deliberate behaviour change)."""
     eng = ServingSimulator(TABLE2, NET, per_model_replicas(TABLE2), seed=7,
-                           queue_aware=True, batch_window_ms=5.0)
+                           queue_aware=True, batch_window_ms=5.0,
+                           charge_batches=False)
     r = eng.run(ModiPick(t_threshold=20.0), 250.0, 500,
                 arrivals=PoissonArrivals(40.0),
                 sla_for=lambda i: 150.0 if i % 3 == 0 else 300.0,

@@ -236,19 +236,28 @@ def test_executor_sla_aware_admission_sheds():
 
 
 # ----------------------------------------------------------------------
-# batched event-loop selection: <= one route_batch call per event-batch
+# batched event-loop selection: <= one routing call per event-batch
 # ----------------------------------------------------------------------
 
 def _spy_route_batch(monkeypatch):
+    """Spy both routing entry points: the array-native batch call and
+    the scalar ``route_one`` fast path the engine takes for singleton
+    event-batches (``route_batch`` delegates to the batch call too, so
+    object-path calls are counted as well)."""
     calls = []
-    orig = Router.route_batch
+    orig_batch = Router.route_batch_arrays
+    orig_one = Router.route_one
 
-    def spy(self, requests, rng, **kw):
-        reqs = list(requests)
-        calls.append(len(reqs))
-        return orig(self, reqs, rng, **kw)
+    def spy_batch(self, t_sla_ms, t_input_ms, rng, **kw):
+        calls.append(len(t_sla_ms))
+        return orig_batch(self, t_sla_ms, t_input_ms, rng, **kw)
 
-    monkeypatch.setattr(Router, "route_batch", spy)
+    def spy_one(self, t_sla_ms, t_input_ms, rng, **kw):
+        calls.append(1)
+        return orig_one(self, t_sla_ms, t_input_ms, rng, **kw)
+
+    monkeypatch.setattr(Router, "route_batch_arrays", spy_batch)
+    monkeypatch.setattr(Router, "route_one", spy_one)
     return calls
 
 

@@ -4,9 +4,7 @@ adapters, diurnal/burst synthesizers, class-aware admission (unit and
 end-to-end protection), the queue-target autoscaler loop, and the
 Router.stats()/reset() + deprecation-shim satellites."""
 import dataclasses
-import importlib
 import json
-import sys
 from dataclasses import dataclass
 from typing import Callable
 
@@ -464,28 +462,6 @@ def test_depth_cap_admission_without_w_queue_fn():
     # stateless: base-class reset() is a no-op that must exist (Router
     # calls it on every controller)
     adm.reset()
-
-
-def test_sim_queueaware_shim_warns_and_reexports():
-    """Satellite: the legacy import path works but raises a
-    DeprecationWarning, and re-exports the router-layer names."""
-    sys.modules.pop("repro.sim.queueaware", None)
-    with pytest.warns(DeprecationWarning, match="repro.router.queueaware"):
-        import repro.sim.queueaware as shim
-        importlib.reload(shim)
-    from repro.router import queueaware as real
-    assert shim.shifted_store is real.shifted_store
-    assert shim.queue_aware_budget is real.queue_aware_budget
-    assert shim.QueueAwareSelector is real.QueueAwareSelector
-    assert shim.WQueueFn is real.WQueueFn
-    # importing the sim package itself must stay warning-free
-    sys.modules.pop("repro.sim.queueaware", None)
-    import warnings as _warnings
-    with _warnings.catch_warnings(record=True) as record:
-        _warnings.simplefilter("always")
-        importlib.reload(importlib.import_module("repro.sim"))
-    assert not [w for w in record
-                if issubclass(w.category, DeprecationWarning)]
 
 
 def test_make_policy_registry():
