@@ -1,0 +1,140 @@
+"""Drift & fault resilience: the recovery story as a benchmark.
+
+Two arms, both built from the ``scenario.registry`` drift/faulty family:
+
+- **Drift**: NasNet-Large's true latency is multiplied mid-run and later
+  restored.  The self-healing windowed profile (``profile="window"``)
+  re-learns the drifted latency within one staleness window, falls back
+  to the next-best model, and re-discovers NasNet after the world
+  recovers; the frozen-profile ablation keeps routing on the seeded
+  belief and stays degraded for the whole drift epoch.  One row per
+  (``mu_mult`` × profile) with the windowed attainment trajectory:
+  ``pre`` (before drift), ``dip`` (the first bucket after the drift
+  fires — the detection cost), ``post`` (the rest of the drift epoch —
+  the recovered steady state), ``final`` (after the true recovery).
+- **Faults**: replica kill/degrade/recover churn on a shared pool, with
+  and without the router's retry/hedged-fallback path.
+
+The mu_mult=2.0 point carries the tier-1-visible resilience assertion
+(adaptive ``post`` ≥ 0.9 attainment and ≥ 2× the frozen ablation's), so
+``benchmarks/run.py --smoke`` fails if self-healing regresses.
+``--json`` at full scale writes ``BENCH_drift_resilience.json``.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, List, Sequence, Tuple
+
+from repro.scenario.build import build, build_policy
+
+# Full-scale drift geometry (ms).  Fast mode scales every time knob by
+# the same factor so the dip/recover shape survives at smoke scale.
+DRIFT_AT = 40_000.0
+RECOVER_AT = 120_000.0
+BUCKET = 10_000.0
+FAST_SCALE = 0.25
+
+
+def _run(scenario):
+    """One epoch on the discrete-event engine, returning the engine
+    (for ``attainment_timeline``) alongside the run result."""
+    h = build(scenario)
+    eng = h.engine()
+    res = eng.run(build_policy(scenario), scenario.workload.t_sla_ms,
+                  scenario.workload.n_requests, arrivals=h.arrivals(0),
+                  warm=scenario.policy.warm, store=h.store())
+    return eng, res
+
+
+def _window(timeline: Sequence[Dict[str, float]], lo: float,
+            hi: float) -> Tuple[float, float]:
+    """Arrival-weighted (attainment, accuracy) over buckets in
+    ``[lo, hi)``; NaN when the window saw no traffic."""
+    rows = [r for r in timeline if lo <= r["t_ms"] < hi]
+    n = sum(r["n"] for r in rows)
+    if not n:
+        return float("nan"), float("nan")
+    att = sum(r["attainment"] * r["n"] for r in rows) / n
+    done = sum(r["n"] * (1.0 - r["shed_rate"]) for r in rows)
+    acc = (sum(r["accuracy"] * r["n"] * (1.0 - r["shed_rate"])
+               for r in rows) / done) if done else 0.0
+    return att, acc
+
+
+def drift_rows(mu_mults: Sequence[float] = (1.5, 2.0, 3.0),
+               fast: bool = False) -> List[Tuple[str, float, str]]:
+    from repro.scenario.registry import drift_scenario
+
+    s = FAST_SCALE if fast else 1.0
+    drift_at, recover_at = DRIFT_AT * s, RECOVER_AT * s
+    kw = dict(drift_at_ms=drift_at, recover_at_ms=recover_at)
+    if fast:
+        mu_mults = (2.0,)
+        kw.update(n_requests=600, stale_after=60, window=16)
+
+    rows: List[Tuple[str, float, str]] = []
+    post_by_arm: Dict[Tuple[float, str], float] = {}
+    for mu_mult in mu_mults:
+        for profile in ("window", "frozen"):
+            sc = drift_scenario(mu_mult=mu_mult, profile=profile,
+                                name=f"bench_drift_{profile}", **kw)
+            eng, res = _run(sc)
+            tl = eng.attainment_timeline(bucket_ms=BUCKET * s)
+            pre, _ = _window(tl, 0.0, drift_at)
+            dip, _ = _window(tl, drift_at, drift_at + BUCKET * s)
+            post, acc_post = _window(tl, drift_at + BUCKET * s, recover_at)
+            final, acc_final = _window(tl, recover_at, math.inf)
+            post_by_arm[(mu_mult, profile)] = post
+            rows.append((
+                f"drift_resilience/drift_mu{mu_mult:g}_{profile}",
+                res.mean_latency * 1e3,
+                f"pre={pre:.3f};dip={dip:.3f};post={post:.3f};"
+                f"final={final:.3f};acc_post={acc_post:.3f};"
+                f"acc_final={acc_final:.3f};retries={res.n_retries}"))
+
+    # The resilience guarantee, visible to tier-1 via --smoke: after one
+    # adaptation bucket the self-healing arm must be back above 0.9
+    # attainment AND at least 2x the frozen ablation (measured ~8x).
+    adaptive = post_by_arm[(2.0, "window")]
+    frozen = post_by_arm[(2.0, "frozen")]
+    assert adaptive >= 0.9, \
+        f"adaptive post-drift attainment {adaptive:.3f} < 0.9"
+    assert adaptive >= 2.0 * frozen, \
+        (f"adaptive post-drift attainment {adaptive:.3f} < 2x frozen "
+         f"ablation {frozen:.3f}")
+    return rows
+
+
+def fault_rows(fast: bool = False) -> List[Tuple[str, float, str]]:
+    from repro.scenario.registry import faulty_scenario
+
+    s = FAST_SCALE if fast else 1.0
+    kw = dict(kill_at_ms=20_000.0 * s, degrade_at_ms=45_000.0 * s,
+              revive_at_ms=60_000.0 * s, recover_at_ms=75_000.0 * s)
+    if fast:
+        kw.update(n_requests=400)
+
+    rows: List[Tuple[str, float, str]] = []
+    for retry in (True, False):
+        sc = faulty_scenario(retry=retry, name="bench_faulty", **kw)
+        eng, res = _run(sc)
+        shed = res.n_rejected / max(res.n_arrived, 1)
+        stats = eng.router.stats()
+        rows.append((
+            f"drift_resilience/faulty_{'retry' if retry else 'noretry'}",
+            res.mean_latency * 1e3,
+            f"attain={res.sla_attainment:.3f};acc={res.mean_accuracy:.3f};"
+            f"shed={shed:.3f};retries={res.n_retries};"
+            f"retry_routed={stats['n_retry_routed']};"
+            f"retry_exhausted={stats['n_retry_exhausted']}"))
+    return rows
+
+
+def bench_rows(fast: bool = False) -> List[Tuple[str, float, str]]:
+    return drift_rows(fast=fast) + fault_rows(fast=fast)
+
+
+if __name__ == "__main__":
+    print("name,us_per_call,derived")
+    for row in bench_rows():
+        print(f"{row[0]},{row[1]:.3f},{row[2]}")

@@ -11,7 +11,8 @@ import os
 def load(dir_, mesh):
     rows = {}
     for f in sorted(glob.glob(os.path.join(dir_, f"*__{mesh}.json"))):
-        r = json.load(open(f))
+        with open(f) as fh:
+            r = json.load(fh)
         rows[(r["arch"], r["shape"])] = r
     return rows
 

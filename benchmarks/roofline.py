@@ -16,7 +16,8 @@ RESULTS_DIR = os.path.join(os.path.dirname(__file__), "results", "dryrun")
 def roofline_rows(mesh: str = "single") -> List[Row]:
     rows: List[Row] = []
     for f in sorted(glob.glob(os.path.join(RESULTS_DIR, f"*__{mesh}.json"))):
-        r = json.load(open(f))
+        with open(f) as fh:
+            r = json.load(fh)
         if r.get("status") != "ok":
             rows.append((f"roofline/{r['arch']}/{r['shape']}/{mesh}", 0.0, "FAILED"))
             continue

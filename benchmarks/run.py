@@ -26,6 +26,7 @@ def main() -> None:
     if args.smoke:
         args.fast = True
 
+    from benchmarks import drift_resilience as dr
     from benchmarks import engine_throughput as et
     from benchmarks import load_sweep as ls
     from benchmarks import paper_figures as pf
@@ -66,6 +67,10 @@ def main() -> None:
         # --smoke: the registry's bit-rot guard)
         "scenario_suite": (lambda: sc.suite_rows(scale=0.1))
         if args.smoke else sc.suite_rows,
+        # drift/fault recovery trajectories; carries the tier-1-visible
+        # resilience assertion (adaptive post-drift attainment >= 0.9
+        # and >= 2x the frozen-profile ablation)
+        "drift_resilience": lambda: dr.bench_rows(fast=args.fast),
     }
     if args.smoke:
         # Toy pool (2 reduced-width variants, short cache, 6 requests):

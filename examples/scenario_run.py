@@ -11,7 +11,11 @@ from a dict exactly as a config file would deserialize it, then runs
 registry scenarios for the dynamic shapes.
 
 Run:  PYTHONPATH=src python examples/scenario_run.py
+      PYTHONPATH=src python examples/scenario_run.py \\
+          --scenario examples/drift.toml
 """
+import argparse
+
 from repro.scenario import Scenario, build, get_scenario
 
 # The steady/Poisson point, as it would sit in a TOML/JSON config file.
@@ -38,6 +42,18 @@ def headline(tag, out):
 
 
 def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--scenario", metavar="PATH", default=None,
+                    help="run a scenario from a .toml or .json file "
+                         "(fault/drift/retry specs included) instead of "
+                         "the built-in tour")
+    args = ap.parse_args()
+    if args.scenario:
+        scenario = Scenario.from_file(args.scenario)
+        print(f"scenario {scenario.name!r} from {args.scenario}")
+        headline(scenario.name, build(scenario).run())
+        return
+
     print("Scenario API: one declarative spec per experiment\n")
 
     scenario = Scenario.from_dict(STEADY)

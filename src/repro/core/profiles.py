@@ -9,10 +9,18 @@ so one bad sample cannot permanently exile an accurate model.
 from __future__ import annotations
 
 import math
+from collections import deque
 from dataclasses import dataclass, field
-from typing import Dict, Iterable, List, Optional, Tuple
+from typing import Deque, Dict, Iterable, List, Optional, Tuple
 
 import numpy as np
+
+
+def _valid_sample(x: float) -> bool:
+    """A usable latency/wait sample: finite and non-negative.  NaN fails
+    the comparison, ±inf fails ``isfinite`` — fault-injected failure
+    signals (inf waits from dead replicas) must never reach the EWMA."""
+    return x >= 0.0 and math.isfinite(x)
 
 
 @dataclass
@@ -161,6 +169,11 @@ class ProfileTable:
 class ProfileStore:
     """Pool of model profiles with ModiPick's maintenance rules."""
 
+    # Class-level default so derived views that bypass ``__init__``
+    # (``router.queueaware._ShiftedView``) still read 0; the in-place
+    # increment creates the instance attribute on first rejection.
+    n_rejected_samples = 0
+
     def __init__(self, models: Iterable[ModelProfile], *, alpha: float = 0.1,
                  cold_age: int = 500):
         self.profiles: Dict[str, ModelProfile] = {m.name: m for m in models}
@@ -192,11 +205,17 @@ class ProfileStore:
         self._table = None
 
     def observe(self, name: str, latency_ms: float) -> None:
+        if not _valid_sample(latency_ms):
+            self.n_rejected_samples += 1
+            return
         p = self.profiles[name]
         p.update(latency_ms, self.alpha)
         self._refresh(name, p)
 
     def observe_queue(self, name: str, wait_ms: float) -> None:
+        if not _valid_sample(wait_ms):
+            self.n_rejected_samples += 1
+            return
         p = self.profiles[name]
         p.update_queue(wait_ms, self.alpha)
         # Queue telemetry touches only the queue_mu column: μ/σ, the
@@ -241,3 +260,147 @@ class ProfileStore:
                 "n_obs": p.n_obs, "queue_mu": p.queue_mu}
             for n, p in self.profiles.items()
         }
+
+
+class WindowedProfileStore(ProfileStore):
+    """Sliding-window estimator with staleness-driven exploration — the
+    self-healing profile mode for drifting worlds.
+
+    Two failure modes of the EWMA base class under drift motivate this
+    subclass (Taylor et al. 2018; ROADMAP item 3):
+
+    - *Slow tracking*: an EWMA with small α takes hundreds of samples
+      to cross an eligibility threshold after a step change.  Here μ/σ
+      come from the last ``window`` samples only, and a window whose
+      newest sample is older than ``stale_after`` selections is cleared
+      before the next observation lands — after a long exile the first
+      fresh sample speaks for the *current* world, not a mixture.
+    - *Permanent exile*: once a drifted model's believed μ exceeds
+      every budget it is never selected, never observed, and never
+      forgiven — even after the drift recovers.  A UCB-style bonus
+      fixes that: for a model unobserved for more than ``stale_after``
+      selections, the *presented* μ decays linearly from the raw
+      window estimate down to ``(1 − explore_bonus)·μ_raw`` over
+      ``explore_ramp`` further selections.  Eventually the optimistic
+      μ re-enters some budget, the model is re-probed, and the first
+      real observation snaps the profile back to measured truth
+      (still drifted → re-exiled; recovered → re-discovered).
+
+    The presented (table) μ is the decayed one; the raw window estimate
+    is kept separately so the decay is idempotent, not compounding.
+    """
+
+    def __init__(self, models: Iterable[ModelProfile], *,
+                 alpha: float = 0.1, cold_age: int = 500,
+                 window: int = 64, stale_after: int = 400,
+                 explore_bonus: float = 0.9,
+                 explore_ramp: Optional[int] = None):
+        super().__init__(models, alpha=alpha, cold_age=cold_age)
+        if window < 2:
+            raise ValueError("window must be >= 2")
+        if stale_after < 1:
+            raise ValueError("stale_after must be >= 1")
+        if not 0.0 <= explore_bonus < 1.0:
+            raise ValueError("explore_bonus must be in [0, 1)")
+        self.window = window
+        self.stale_after = stale_after
+        self.explore_bonus = explore_bonus
+        self.explore_ramp = (explore_ramp if explore_ramp is not None
+                             else stale_after)
+        names = list(self.profiles)
+        self._win: Dict[str, Deque[float]] = {n: deque() for n in names}
+        self._sum: Dict[str, float] = {n: 0.0 for n in names}
+        self._sumsq: Dict[str, float] = {n: 0.0 for n in names}
+        self._raw: Dict[str, Tuple[float, float]] = {n: (0.0, 0.0)
+                                                     for n in names}
+        # Step (selection counter) at the last accepted observation.
+        self._seen: Dict[str, int] = {n: 0 for n in names}
+
+    def warm_seed(self, name: str, mu: float, var: float,
+                  n_obs: int = 1000) -> None:
+        """Install a trusted offline profile (the zoo's seeded truth)
+        without fabricating window samples: the raw estimate is set
+        directly and the window stays empty, so the first live sample
+        after a drift is not diluted by synthetic history."""
+        p = self.profiles[name]
+        p.mu, p.var, p.n_obs = mu, var, n_obs
+        self._raw[name] = (mu, var)
+        self._seen[name] = self.step
+        self._refresh(name, p)
+
+    def observe(self, name: str, latency_ms: float) -> None:
+        if not _valid_sample(latency_ms):
+            self.n_rejected_samples += 1
+            return
+        win = self._win[name]
+        if win and (self.step - self._seen[name]) > self.stale_after:
+            # Returning from exile: the buffered samples describe a
+            # world at least one drift epoch old.  Start fresh.
+            win.clear()
+            self._sum[name] = 0.0
+            self._sumsq[name] = 0.0
+        win.append(latency_ms)
+        self._sum[name] += latency_ms
+        self._sumsq[name] += latency_ms * latency_ms
+        if len(win) > self.window:
+            old = win.popleft()
+            self._sum[name] -= old
+            self._sumsq[name] -= old * old
+        n = len(win)
+        mu = self._sum[name] / n
+        var = max(0.0, self._sumsq[name] / n - mu * mu)
+        self._raw[name] = (mu, var)
+        self._seen[name] = self.step
+        p = self.profiles[name]
+        p.mu, p.var = mu, var
+        p.n_obs += 1
+        self._refresh(name, p)
+
+    def mark_selected(self, name: str) -> None:
+        super().mark_selected(name)
+        self._present_stale()
+
+    def _present_stale(self) -> None:
+        """Sweep the exploration decay: for every model whose last
+        accepted observation is more than ``stale_after`` selections
+        old, present an optimistically-shrunk μ.  O(models) per
+        selection — the zoo is a handful of entries."""
+        for name, (raw_mu, _) in self._raw.items():
+            p = self.profiles[name]
+            if p.n_obs == 0:
+                continue      # never observed: the cold-probe path owns it
+            age = self.step - self._seen[name]
+            if age <= self.stale_after:
+                presented = raw_mu
+            else:
+                frac = min(1.0, (age - self.stale_after)
+                           / float(self.explore_ramp))
+                presented = raw_mu * (1.0 - self.explore_bonus * frac)
+            if presented != p.mu:
+                p.mu = presented
+                self._refresh(name, p)
+
+    def staleness(self, name: str) -> int:
+        """Selections since this model's last accepted observation."""
+        return self.step - self._seen[name]
+
+
+class FrozenProfileStore(ProfileStore):
+    """Ablation baseline: profiles never move after construction.
+
+    Observations are validated (rejects still counted — the hardening
+    contract holds everywhere) and then dropped; cold-model re-probing
+    is disabled.  Under drift this arm keeps routing on the seeded
+    (μ, σ) forever — the degradation the adaptive stores are measured
+    against in ``benchmarks/drift_resilience.py``."""
+
+    def observe(self, name: str, latency_ms: float) -> None:
+        if not _valid_sample(latency_ms):
+            self.n_rejected_samples += 1
+
+    def observe_queue(self, name: str, wait_ms: float) -> None:
+        if not _valid_sample(wait_ms):
+            self.n_rejected_samples += 1
+
+    def cold_models(self) -> List[str]:
+        return []

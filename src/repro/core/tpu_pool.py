@@ -43,7 +43,8 @@ def load_pool(results_dir: str = DEFAULT_DIR, mesh: str = "single"
     from repro.configs.registry import get_config
     by_arch: Dict[str, Dict[str, dict]] = {}
     for f in glob.glob(os.path.join(results_dir, f"*__{mesh}.json")):
-        r = json.load(open(f))
+        with open(f) as fh:
+            r = json.load(fh)
         if r.get("status") != "ok":
             continue
         by_arch.setdefault(r["arch"], {})[r["shape"]] = r

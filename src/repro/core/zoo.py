@@ -58,20 +58,44 @@ def true_profiles(entries: List[ZooEntry]) -> Dict[str, ZooEntry]:
 
 
 def make_store(entries: List[ZooEntry], *, alpha: float = 0.1,
-               cold_age: int = 500, warm: bool = True):
+               cold_age: int = 500, warm: bool = True,
+               profile: str = "ewma", window: int = 64,
+               stale_after: int = 400, explore_bonus: float = 0.9):
     """Build a ProfileStore; ``warm`` seeds profiles at the true (μ, σ)
-    like the paper's 1000-request warm-up."""
-    from repro.core.profiles import ProfileStore
+    like the paper's 1000-request warm-up.
+
+    ``profile`` picks the estimator family: ``"ewma"`` (the paper's
+    EWMA store — the default, and the only mode existing call sites
+    see), ``"window"`` (sliding-window + staleness exploration —
+    ``WindowedProfileStore``), ``"frozen"`` (never updates — the
+    drift-ablation baseline).  The window knobs are ignored outside
+    ``"window"`` mode."""
+    from repro.core.profiles import (FrozenProfileStore, ProfileStore,
+                                     WindowedProfileStore)
     profiles = []
     for e in entries:
         p = ModelProfile(name=e.name, accuracy=e.top1 / 100.0)
         profiles.append(p)
-    store = ProfileStore(profiles, alpha=alpha, cold_age=cold_age)
+    if profile == "window":
+        store = WindowedProfileStore(
+            profiles, alpha=alpha, cold_age=cold_age, window=window,
+            stale_after=stale_after, explore_bonus=explore_bonus)
+    elif profile == "frozen":
+        store = FrozenProfileStore(profiles, alpha=alpha, cold_age=cold_age)
+    elif profile == "ewma":
+        store = ProfileStore(profiles, alpha=alpha, cold_age=cold_age)
+    else:
+        raise ValueError(f"unknown profile mode {profile!r} "
+                         "(expected ewma|window|frozen)")
     if warm:
         for e in entries:
-            p = store[e.name]
-            p.mu = e.mu_ms
-            p.var = e.sigma_ms ** 2
-            p.n_obs = 1000
+            if isinstance(store, WindowedProfileStore):
+                store.warm_seed(e.name, e.mu_ms, e.sigma_ms ** 2,
+                                n_obs=1000)
+            else:
+                p = store[e.name]
+                p.mu = e.mu_ms
+                p.var = e.sigma_ms ** 2
+                p.n_obs = 1000
         store.invalidate()  # direct field writes bypass the dirty flag
     return store

@@ -26,6 +26,7 @@ from repro.router.api import (BatchDecisions, BudgetBreakdown,
 from repro.router.charging import ChargedWaits
 from repro.router.queueaware import (QueueAwareSelector, queue_aware_budget,
                                      shifted_store)
+from repro.router.retry import RetryPolicy, cheapest_viable
 from repro.router.router import Router
 
 __all__ = [
@@ -34,4 +35,5 @@ __all__ = [
     "BatchDecisions", "BudgetBreakdown", "ChargedWaits",
     "InferenceRequest", "RouterDecision", "QueueAwareSelector",
     "queue_aware_budget", "shifted_store", "Router",
+    "RetryPolicy", "cheapest_viable",
 ]

@@ -104,13 +104,20 @@ class BatchDecisions:
 
 @dataclass(slots=True)
 class RouterDecision:
-    """The router's answer for one request."""
+    """The router's answer for one request.
+
+    ``attempts`` counts placements including the first; a recovery
+    re-route (replica failure or deadline-overrun hedge — see
+    ``router.retry``) returns a new decision with ``attempts`` bumped
+    and the abandoned variant appended to ``fallback_chain``."""
     request: InferenceRequest
     variant: str                      # "" when the request was shed
     admitted: bool
     budget: BudgetBreakdown
     reject_reason: str = ""
     trace: Optional[SelectionTrace] = None
+    attempts: int = 1
+    fallback_chain: Tuple[str, ...] = ()
 
     @property
     def fallback(self) -> bool:

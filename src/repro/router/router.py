@@ -71,6 +71,7 @@ from repro.router.api import (BatchDecisions, BudgetBreakdown,
                               InferenceRequest, RouterDecision)
 from repro.router.charging import ChargedWaits
 from repro.router.queueaware import WQueueFn, shifted_store
+from repro.router.retry import cheapest_viable
 
 
 class Router:
@@ -108,6 +109,10 @@ class Router:
         self.n_shed = 0
         self.n_fallback = 0
         self.n_batches = 0
+        # Recovery path (router.retry): re-route requests and outcomes.
+        self.n_retries = 0
+        self.n_retry_routed = 0
+        self.n_retry_exhausted = 0
 
     # ------------------------------------------------------------------
     # object surface (adapters over the array core)
@@ -517,6 +522,57 @@ class Router:
         self.n_fallback += int((res.admitted & res.fallback).sum())
 
     # ------------------------------------------------------------------
+    # recovery surface (router.retry)
+    # ------------------------------------------------------------------
+    def reroute_one(self, remaining_budget_ms: float, *,
+                    w_queue_map: Optional[Dict[str, float]] = None) -> int:
+        """Recovery pick for one in-flight request: the cheapest
+        still-viable model (smallest believed ``W_queue + μ`` fitting
+        the *remaining* budget — see ``router.retry.cheapest_viable``).
+        Returns the model index, or −1 when nothing fits (the request
+        is dropped as a deadline miss).  Deterministic and draw-free:
+        retries never perturb the seeded primary-selection stream."""
+        self.n_retries += 1
+        mid = cheapest_viable(self.store.table(), w_queue_map,
+                              float(remaining_budget_ms))
+        if mid < 0:
+            self.n_retry_exhausted += 1
+            return -1
+        self.n_retry_routed += 1
+        self.store.mark_selected(self.store.table().names[mid])
+        return mid
+
+    def reroute(self, decision: RouterDecision,
+                remaining_budget_ms: float, *,
+                w_queue_map: Optional[Dict[str, float]] = None
+                ) -> RouterDecision:
+        """Object-path recovery: a new :class:`RouterDecision` with
+        ``attempts`` bumped and the abandoned variant appended to
+        ``fallback_chain``.  Not admitted (``variant == ""``) when no
+        model fits the remaining budget."""
+        chain = decision.fallback_chain + ((decision.variant,)
+                                           if decision.variant else ())
+        mid = self.reroute_one(remaining_budget_ms,
+                               w_queue_map=w_queue_map)
+        bd = BudgetBreakdown(
+            t_sla_ms=decision.budget.t_sla_ms,
+            t_network_ms=decision.budget.t_network_ms,
+            w_queue_ms=(w_queue_map.get(
+                self.store.table().names[mid], 0.0)
+                if (mid >= 0 and w_queue_map is not None) else 0.0))
+        if mid < 0:
+            return RouterDecision(
+                request=decision.request, variant="", admitted=False,
+                budget=bd, reject_reason="no viable model within the "
+                "remaining budget", attempts=decision.attempts + 1,
+                fallback_chain=chain)
+        return RouterDecision(
+            request=decision.request,
+            variant=self.store.table().names[mid], admitted=True,
+            budget=bd, attempts=decision.attempts + 1,
+            fallback_chain=chain)
+
+    # ------------------------------------------------------------------
     def observe(self, name: str, latency_ms: float) -> None:
         """Feed a measured inference latency back into the profiles."""
         self.store.observe(name, latency_ms)
@@ -538,6 +594,9 @@ class Router:
         self.n_shed = 0
         self.n_fallback = 0
         self.n_batches = 0
+        self.n_retries = 0
+        self.n_retry_routed = 0
+        self.n_retry_exhausted = 0
         self.admission.reset()
 
     def stats(self) -> Dict[str, float]:
@@ -551,6 +610,9 @@ class Router:
             "n_shed": self.n_shed,
             "n_fallback": self.n_fallback,
             "n_batches": self.n_batches,
+            "n_retries": self.n_retries,
+            "n_retry_routed": self.n_retry_routed,
+            "n_retry_exhausted": self.n_retry_exhausted,
             "mean_batch": (self.n_routed / self.n_batches
                            if self.n_batches else 0.0),
         }

@@ -18,17 +18,22 @@ autoscaler closes the replica loop from ``Router.stats()`` telemetry.
 from repro.scenario.autoscale import QueueTargetAutoscaler
 from repro.scenario.build import (EpochResult, ScenarioHarness,
                                   ScenarioResult, build, build_closed_loop,
-                                  build_engine, build_executor)
-from repro.scenario.registry import get_scenario, list_scenarios, register
-from repro.scenario.spec import (AutoscalerSpec, DeploymentSpec, NetworkSpec,
-                                 PolicySpec, Scenario, SlaClass,
-                                 WorkloadSpec)
+                                  build_engine, build_executor, build_faults,
+                                  build_retry)
+from repro.scenario.registry import (drift_scenario, faulty_scenario,
+                                     get_scenario, list_scenarios, register)
+from repro.scenario.spec import (AutoscalerSpec, DeploymentSpec, DriftSpec,
+                                 FaultSpec, NetworkSpec, PolicySpec,
+                                 RetrySpec, Scenario, SlaClass, WorkloadSpec)
 
 __all__ = [
     "Scenario", "WorkloadSpec", "NetworkSpec", "DeploymentSpec",
     "PolicySpec", "SlaClass", "AutoscalerSpec",
+    "FaultSpec", "DriftSpec", "RetrySpec",
     "build", "build_engine", "build_closed_loop", "build_executor",
+    "build_faults", "build_retry",
     "ScenarioHarness", "ScenarioResult", "EpochResult",
     "QueueTargetAutoscaler",
     "register", "get_scenario", "list_scenarios",
+    "drift_scenario", "faulty_scenario",
 ]

@@ -28,8 +28,11 @@ from repro.core.netmodel import NetworkModel
 from repro.core.policy import Policy, make_policy
 from repro.core.zoo import PROTOTYPE_POOL, TABLE2, ZooEntry, make_store
 from repro.router.admission import AdmissionController, make_admission
+from repro.router.retry import RetryPolicy
 from repro.scenario.autoscale import QueueTargetAutoscaler
 from repro.scenario.spec import Scenario
+from repro.sim.faults import (FaultEvent, LatencyDrift, NetworkDrift,
+                              ReplicaFault)
 from repro.sim.arrivals import (ArrivalProcess, ClosedLoopArrivals,
                                 PoissonArrivals, TraceArrivals, burst_trace,
                                 diurnal_trace)
@@ -94,6 +97,34 @@ def build_replicas(scenario: Scenario,
                               max_queue_depth=dep.max_queue_depth)
 
 
+def build_faults(scenario: Scenario) -> List[FaultEvent]:
+    """Compile the deployment's declarative fault/drift specs into the
+    engine's ``sim.faults`` records, sorted by fire time."""
+    dep = scenario.deployment
+    out: List[FaultEvent] = []
+    for f in dep.faults:
+        out.append(ReplicaFault(at_ms=f.at_ms, kind=f.kind,
+                                replica=f.replica, factor=f.factor))
+    for s in dep.drifts:
+        if s.kind == "latency":
+            out.append(LatencyDrift(at_ms=s.at_ms, model=s.model,
+                                    mu_mult=s.mu_mult,
+                                    sigma_mult=s.sigma_mult))
+        else:
+            out.append(NetworkDrift(at_ms=s.at_ms, rtt_mult=s.rtt_mult))
+    out.sort(key=lambda e: e.at_ms)
+    return out
+
+
+def build_retry(scenario: Scenario) -> Optional[RetryPolicy]:
+    r = scenario.deployment.retry
+    if r is None:
+        return None
+    return RetryPolicy(max_attempts=r.max_attempts,
+                       reroute_on_overrun=r.reroute_on_overrun,
+                       overrun_margin_ms=r.overrun_margin_ms)
+
+
 def build_arrival_times(scenario: Scenario) -> Optional[np.ndarray]:
     """Full-run timestamps for trace-shaped workloads (trace / diurnal /
     burst); None for the generative processes (poisson / closed_loop)."""
@@ -130,7 +161,8 @@ def build_engine(scenario: Scenario, *, n_replicas: Optional[int] = None,
         alpha=pol.alpha, cold_age=pol.cold_age, cold_probe=pol.cold_probe,
         spike_prob=dep.spike_prob, spike_mult=dep.spike_mult,
         queue_aware=pol.queue_aware, admission=build_admission(scenario),
-        batch_window_ms=dep.batch_window_ms, backend=pol.backend)
+        batch_window_ms=dep.batch_window_ms, backend=pol.backend,
+        faults=build_faults(scenario), retry=build_retry(scenario))
 
 
 def build_closed_loop(scenario: Scenario):
@@ -271,7 +303,10 @@ class ScenarioHarness:
     def store(self):
         pol = self.scenario.policy
         return make_store(build_entries(self.scenario), alpha=pol.alpha,
-                          cold_age=pol.cold_age, warm=pol.warm)
+                          cold_age=pol.cold_age, warm=pol.warm,
+                          profile=pol.profile, window=pol.window,
+                          stale_after=pol.stale_after,
+                          explore_bonus=pol.explore_bonus)
 
     # -- workload slicing ----------------------------------------------
     def epoch_sizes(self) -> List[int]:

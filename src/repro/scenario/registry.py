@@ -23,11 +23,11 @@ and at full scale by ``benchmarks/scenario_suite.py``:
 """
 from __future__ import annotations
 
-from typing import Dict, List
+from typing import Dict, List, Optional
 
-from repro.scenario.spec import (AutoscalerSpec, DeploymentSpec,
-                                 NetworkSpec, PolicySpec, Scenario, SlaClass,
-                                 WorkloadSpec)
+from repro.scenario.spec import (AutoscalerSpec, DeploymentSpec, DriftSpec,
+                                 FaultSpec, NetworkSpec, PolicySpec,
+                                 RetrySpec, Scenario, SlaClass, WorkloadSpec)
 
 _REGISTRY: Dict[str, Scenario] = {}
 
@@ -133,3 +133,90 @@ register(Scenario(
     policy=PolicySpec(policy="modipick", kwargs={"t_threshold": 20.0},
                       queue_aware=True),
     seed=9))
+
+
+# ----------------------------------------------------------------------
+# the drift/faulty family (fault injection & drift resilience)
+# ----------------------------------------------------------------------
+
+# A tight (low-variance) uplink so the drift experiment's budget is
+# sharp: 2·40 = 80 ms of network under a 250 ms SLA leaves a 170 ms
+# budget — NasNet-Large (μ 112.61) fits, its 2x-drifted self (225.22)
+# does not, and a drifted pick's true e2e (~305 ms) is a certain miss.
+_DRIFT_NET = NetworkSpec(mean_ms=40.0, std_ms=10.0)
+
+
+def drift_scenario(*, mu_mult: float = 2.0, profile: str = "window",
+                   n_requests: int = 2400, rate_rps: float = 12.0,
+                   drift_at_ms: float = 40_000.0,
+                   recover_at_ms: float = 120_000.0,
+                   window: int = 64, stale_after: int = 250,
+                   seed: int = 11, name: Optional[str] = None) -> Scenario:
+    """Mid-run latency drift on the most accurate model, with recovery.
+
+    NasNet-Large's true μ is multiplied by ``mu_mult`` at
+    ``drift_at_ms`` and restored at ``recover_at_ms``.  Replicas are
+    per-model and plentiful (queue waits ~0), so the *only* signal that
+    the world changed is the observed inference latency — exactly the
+    telemetry a profile estimator owns.  ``profile`` picks the arm:
+    ``"window"`` (self-healing sliding window + staleness exploration)
+    recovers; ``"frozen"`` (the ablation) keeps routing on the seeded
+    profile and stays degraded.  Cold probing is off so re-discovery is
+    attributable to the staleness bonus alone.
+    """
+    return Scenario(
+        name=name or f"drift_{profile}",
+        workload=WorkloadSpec(arrival="poisson", rate_rps=rate_rps,
+                              n_requests=n_requests, t_sla_ms=250.0),
+        network=_DRIFT_NET,
+        deployment=DeploymentSpec(
+            topology="per_model", replicas=4,
+            drifts=(DriftSpec(kind="latency", at_ms=drift_at_ms,
+                              model="NasNet-Large", mu_mult=mu_mult),
+                    DriftSpec(kind="latency", at_ms=recover_at_ms,
+                              model="NasNet-Large", mu_mult=1.0)),
+            retry=RetrySpec(max_attempts=2)),
+        policy=PolicySpec(policy="modipick", kwargs={"t_threshold": 20.0},
+                          queue_aware=True, cold_probe=False,
+                          profile=profile, window=window,
+                          stale_after=stale_after),
+        seed=seed)
+
+
+def faulty_scenario(*, retry: bool = True, n_requests: int = 1500,
+                    rate_rps: float = 15.0,
+                    kill_at_ms: float = 20_000.0,
+                    revive_at_ms: float = 60_000.0,
+                    degrade_at_ms: float = 45_000.0,
+                    degrade_factor: float = 2.5,
+                    recover_at_ms: float = 75_000.0,
+                    seed: int = 13, name: Optional[str] = None) -> Scenario:
+    """Replica-lifecycle churn on a shared pool: one replica killed
+    mid-run (its in-flight and queued requests hit the recovery path),
+    a second degraded, both eventually restored.  ``retry=False``
+    disables the recovery path — the victims are simply rejected
+    (the retry-ablation arm)."""
+    return Scenario(
+        name=name or ("faulty" if retry else "faulty_noretry"),
+        workload=WorkloadSpec(arrival="poisson", rate_rps=rate_rps,
+                              n_requests=n_requests, t_sla_ms=250.0),
+        network=_DRIFT_NET,
+        deployment=DeploymentSpec(
+            topology="shared", replicas=3,
+            admission="sla_aware",
+            faults=(FaultSpec(kind="kill", replica="r0", at_ms=kill_at_ms),
+                    FaultSpec(kind="degrade", replica="r1",
+                              at_ms=degrade_at_ms, factor=degrade_factor),
+                    FaultSpec(kind="recover", replica="r0",
+                              at_ms=revive_at_ms),
+                    FaultSpec(kind="recover", replica="r1",
+                              at_ms=recover_at_ms)),
+            retry=RetrySpec(max_attempts=3) if retry else None),
+        policy=PolicySpec(policy="modipick", kwargs={"t_threshold": 20.0},
+                          queue_aware=True),
+        seed=seed)
+
+
+register(drift_scenario(name="drift"))
+register(drift_scenario(profile="frozen", name="drift_frozen"))
+register(faulty_scenario(name="faulty"))

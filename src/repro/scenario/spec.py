@@ -38,6 +38,9 @@ TOPOLOGIES = ("per_model", "shared")
 ZOOS = ("table2", "prototype")
 ADMISSION_MODES = ("none", "admit_all", "depth_cap", "sla_aware",
                    "class_aware")
+FAULT_KINDS = ("kill", "degrade", "drain", "recover")
+DRIFT_KINDS = ("latency", "network")
+PROFILE_MODES = ("ewma", "window", "frozen")
 
 
 def _require(cond: bool, msg: str) -> None:
@@ -156,6 +159,69 @@ class AutoscalerSpec:
 
 
 @dataclass(frozen=True)
+class FaultSpec:
+    """One replica-lifecycle fault (``sim.faults.ReplicaFault``):
+    ``kind`` transition on ``replica`` at ``at_ms`` into the run
+    (engine timeline; ``factor`` is the degrade slowdown)."""
+    kind: str
+    replica: str
+    at_ms: float
+    factor: float = 2.0
+
+    def __post_init__(self):
+        _require(self.kind in FAULT_KINDS,
+                 f"fault kind must be one of {FAULT_KINDS}, "
+                 f"got {self.kind!r}")
+        _require(bool(self.replica), "FaultSpec needs a replica name")
+        _require(self.at_ms >= 0.0, "at_ms must be non-negative")
+        _require(self.factor > 0.0, "factor must be positive")
+
+
+@dataclass(frozen=True)
+class DriftSpec:
+    """One ground-truth drift event: ``latency`` shifts one model's
+    service process (μ/σ multiplied vs the seeded truth — absolute, not
+    cumulative, so ``mu_mult=1.0`` later is the recovery); ``network``
+    scales the RTT by ``rtt_mult``."""
+    kind: str = "latency"
+    at_ms: float = 0.0
+    model: str = ""                  # latency drifts only
+    mu_mult: float = 1.0
+    sigma_mult: float = 1.0
+    rtt_mult: float = 1.0            # network drifts only
+
+    def __post_init__(self):
+        _require(self.kind in DRIFT_KINDS,
+                 f"drift kind must be one of {DRIFT_KINDS}, "
+                 f"got {self.kind!r}")
+        _require(self.at_ms >= 0.0, "at_ms must be non-negative")
+        if self.kind == "latency":
+            _require(bool(self.model), "latency drift needs a model name")
+            _require(self.mu_mult > 0.0 and self.sigma_mult > 0.0,
+                     "mu_mult/sigma_mult must be positive")
+        else:
+            _require(self.rtt_mult > 0.0, "rtt_mult must be positive")
+
+
+@dataclass(frozen=True)
+class RetrySpec:
+    """Router recovery policy (``router.retry.RetryPolicy``):
+    ``max_attempts`` total placements per request including the first;
+    ``reroute_on_overrun`` arms the deadline-overrun hedge at service
+    start, with ``overrun_margin_ms`` slack before it triggers."""
+    max_attempts: int = 2
+    reroute_on_overrun: bool = True
+    overrun_margin_ms: float = 0.0
+
+    def __post_init__(self):
+        _require(self.max_attempts >= 1,
+                 "max_attempts must be >= 1 (it counts the first "
+                 "placement)")
+        _require(self.overrun_margin_ms >= 0.0,
+                 "overrun_margin_ms must be non-negative")
+
+
+@dataclass(frozen=True)
 class DeploymentSpec:
     """What serves: zoo subset, replica topology, admission, batching."""
     zoo: str = "table2"              # "table2" | "prototype"
@@ -170,6 +236,11 @@ class DeploymentSpec:
     spike_prob: float = 0.0          # co-tenant latency spikes
     spike_mult: float = 10.0
     autoscaler: Optional[AutoscalerSpec] = None
+    # Fault injection & recovery (() / None = the fair-weather world;
+    # runs stay bit-identical to the pre-fault engine).
+    faults: Tuple[FaultSpec, ...] = ()
+    drifts: Tuple[DriftSpec, ...] = ()
+    retry: Optional[RetrySpec] = None
 
     def __post_init__(self):
         _require(self.zoo in ZOOS,
@@ -219,6 +290,14 @@ class PolicySpec:
     cold_age: int = 500
     cold_probe: bool = True
     warm: bool = True                # seed profiles at the true (mu, sigma)
+    # Profile estimator family (``core.zoo.make_store``): "ewma" (the
+    # paper's), "window" (sliding window + staleness exploration — the
+    # self-healing mode), "frozen" (drift-ablation baseline).  The
+    # window knobs are ignored outside "window" mode.
+    profile: str = "ewma"
+    window: int = 64
+    stale_after: int = 400
+    explore_bonus: float = 0.9
 
     def __post_init__(self):
         from repro.core.policy import POLICIES, make_policy
@@ -230,6 +309,13 @@ class PolicySpec:
                  f"got {self.backend!r}")
         _require(0.0 < self.alpha <= 1.0, "alpha must be in (0, 1]")
         _require(self.cold_age >= 1, "cold_age must be >= 1")
+        _require(self.profile in PROFILE_MODES,
+                 f"profile must be one of {PROFILE_MODES}, "
+                 f"got {self.profile!r}")
+        _require(self.window >= 2, "window must be >= 2")
+        _require(self.stale_after >= 1, "stale_after must be >= 1")
+        _require(0.0 <= self.explore_bonus < 1.0,
+                 "explore_bonus must be in [0, 1)")
         if not self.kwargs:
             object.__setattr__(
                 self, "kwargs",
@@ -259,6 +345,13 @@ class Scenario:
             _require(self.workload.epochs > 1,
                      "an autoscaler needs workload.epochs > 1 "
                      "(it acts between epochs)")
+        if self.deployment.faults or self.deployment.drifts:
+            # Fault times reference one engine timeline; multi-epoch
+            # runs re-zero time per epoch, which would replay every
+            # fault each epoch.
+            _require(self.workload.epochs == 1,
+                     "fault/drift injection needs workload.epochs == 1 "
+                     "(fault times reference the single-run timeline)")
 
     # -- serialization -------------------------------------------------
     def to_dict(self) -> Dict[str, Any]:
@@ -277,6 +370,12 @@ class Scenario:
         dep = dict(d.get("deployment", {}))
         if dep.get("autoscaler") is not None:
             dep["autoscaler"] = AutoscalerSpec(**dep["autoscaler"])
+        if "faults" in dep:
+            dep["faults"] = tuple(FaultSpec(**f) for f in dep["faults"])
+        if "drifts" in dep:
+            dep["drifts"] = tuple(DriftSpec(**s) for s in dep["drifts"])
+        if dep.get("retry") is not None:
+            dep["retry"] = RetrySpec(**dep["retry"])
         _tupled(dep, "subset", "speeds")
         return cls(
             name=d["name"],
@@ -285,6 +384,23 @@ class Scenario:
             deployment=DeploymentSpec(**dep),
             policy=PolicySpec(**d.get("policy", {})),
             seed=int(d.get("seed", 0)))
+
+    @classmethod
+    def from_file(cls, path) -> "Scenario":
+        """Load a scenario from a ``.toml`` or ``.json`` config file
+        (anything else is parsed as JSON).  Fault/drift/retry specs
+        round-trip like every other field."""
+        p = str(path)
+        if p.endswith(".toml"):
+            try:
+                import tomllib          # 3.11+
+            except ImportError:         # pragma: no cover - env-dependent
+                import tomli as tomllib
+            with open(p, "rb") as f:
+                return cls.from_dict(tomllib.load(f))
+        import json
+        with open(p, "r", encoding="utf-8") as f:
+            return cls.from_dict(json.load(f))
 
     # -- compilation ---------------------------------------------------
     def build(self):

@@ -39,16 +39,24 @@ from repro.sim.arrivals import (ArrivalProcess, ClosedLoopArrivals,
                                 diurnal_trace)
 from repro.sim.engine import (LoadSimResult, ServingSimulator, SimRequest,
                               rate_sweep)
-from repro.sim.events import ARRIVAL, DEPART, ENQUEUE, FINISH, EventQueue
-from repro.sim.replica import (GaussianServiceModel, Replica, ReplicaPool,
+from repro.sim.events import (ARRIVAL, DEPART, ENQUEUE, FAULT, FINISH,
+                              EventQueue)
+from repro.sim.faults import (FaultEvent, LatencyDrift, NetworkDrift,
+                              ReplicaFault, schedule_faults)
+from repro.sim.replica import (DEGRADED, DOWN, DRAINING, HEALTH_STATES, UP,
+                               GaussianServiceModel, Replica, ReplicaPool,
                                per_model_replicas, shared_replicas)
 
 __all__ = [
     "ArrivalProcess", "ClosedLoopArrivals", "PoissonArrivals",
     "TraceArrivals", "burst_trace", "diurnal_trace", "LoadSimResult",
     "ServingSimulator", "SimRequest",
-    "rate_sweep", "ARRIVAL", "DEPART", "ENQUEUE", "FINISH", "EventQueue",
+    "rate_sweep", "ARRIVAL", "DEPART", "ENQUEUE", "FAULT", "FINISH",
+    "EventQueue",
+    "FaultEvent", "LatencyDrift", "NetworkDrift", "ReplicaFault",
+    "schedule_faults",
     "QueueAwareSelector", "queue_aware_budget", "shifted_store",
     "GaussianServiceModel", "Replica", "ReplicaPool", "per_model_replicas",
     "shared_replicas",
+    "UP", "DEGRADED", "DRAINING", "DOWN", "HEALTH_STATES",
 ]

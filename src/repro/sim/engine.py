@@ -61,8 +61,12 @@ from repro.core.policy import Policy
 from repro.core.profiles import ProfileStore
 from repro.core.zoo import ZooEntry, make_store, true_profiles
 from repro.router import AdmissionController, Router
+from repro.router.retry import RetryPolicy
 from repro.sim.arrivals import ArrivalProcess, ClosedLoopArrivals
-from repro.sim.events import ARRIVAL, DEPART, ENQUEUE, FINISH, EventQueue
+from repro.sim.events import (ARRIVAL, DEPART, ENQUEUE, FAULT, FINISH,
+                              EventQueue)
+from repro.sim.faults import (FaultEvent, LatencyDrift, NetworkDrift,
+                              ReplicaFault, schedule_faults)
 from repro.sim.replica import (GaussianServiceModel, Replica, ReplicaPool,
                                shared_replicas)
 
@@ -84,6 +88,7 @@ class SimRequest:
     service_ms: float = 0.0
     finish_ms: float = 0.0
     depart_ms: float = 0.0
+    retries: int = 0          # recovery re-placements (attempts - 1)
 
     @property
     def queue_wait_ms(self) -> float:
@@ -104,7 +109,7 @@ class _Columns:
 
     __slots__ = ("arrival", "t_input", "t_sla", "enqueue", "sstart",
                  "service", "finish", "depart", "model", "replica",
-                 "cls", "fallback", "rejected", "reason")
+                 "cls", "fallback", "rejected", "reason", "retries")
 
     def __init__(self, n: int):
         z = lambda dt: np.zeros(n, dtype=dt)
@@ -122,6 +127,7 @@ class _Columns:
         self.fallback = z(bool)
         self.rejected = z(bool)
         self.reason = z(np.int16)                       # reject-reason code
+        self.retries = z(np.int16)                      # recovery re-placements
 
 
 @dataclass
@@ -147,6 +153,10 @@ class LoadSimResult:
     # shed_rate, mean_latency}.  Attainment counts rejections as misses,
     # exactly like the run-level number.
     per_class: Dict[str, Dict[str, float]] = field(default_factory=dict)
+    # Recovery re-placements across all requests (replica failure or
+    # deadline-overrun hedges that found a viable fallback) — 0 for
+    # fault-free runs.
+    n_retries: int = 0
 
     @property
     def violation_rate(self) -> float:
@@ -164,7 +174,9 @@ class ServingSimulator:
                  admission: Optional[AdmissionController] = None,
                  batch_window_ms: float = 0.0,
                  backend: Optional[str] = None,
-                 charge_batches: bool = True):
+                 charge_batches: bool = True,
+                 faults: Sequence[FaultEvent] = (),
+                 retry: Optional[RetryPolicy] = None):
         self.entries = list(entries)
         self.network = network
         if replicas is None:
@@ -194,6 +206,13 @@ class ServingSimulator:
         # the historical one-snapshot batch semantics (the ablation
         # baseline, and the mode pinned by pre-charging goldens).
         self.charge_batches = charge_batches
+        # Fault injection (``sim/faults.py``): environment events pushed
+        # onto the run's queue; () keeps the fair-weather world and the
+        # seeded goldens bit-identical.  ``retry`` arms the recovery
+        # path (re-route on replica failure / deadline overrun); None
+        # means a lost request is simply rejected.
+        self.faults = tuple(faults)
+        self.retry = retry
         self.router: Optional[Router] = None  # built per run()
         # Post-run SoA state (lazy SimRequest materialization).
         self._cols: Optional[_Columns] = None
@@ -290,6 +309,25 @@ class ServingSimulator:
             evq.push(arrivals.first(rng), ARRIVAL, 0)
             n_issued = 1
 
+        # Fault schedule: validated against this run's topology, then
+        # pushed as FAULT events.  () schedules nothing — the queue and
+        # every RNG stream are exactly the fair-weather run's.
+        replica_by_name = {r.name: r for r in self.pool.replicas}
+        for f in self.faults:
+            if isinstance(f, ReplicaFault) and f.replica not in replica_by_name:
+                raise ValueError(f"fault targets unknown replica "
+                                 f"{f.replica!r} (pool: "
+                                 f"{sorted(replica_by_name)})")
+            if isinstance(f, LatencyDrift) and f.model not in truth:
+                raise ValueError(f"drift targets unknown model "
+                                 f"{f.model!r} (zoo: {names})")
+        schedule_faults(evq, self.faults)
+        net_scale = 1.0           # live RTT multiplier (NetworkDrift)
+        retry = self.retry
+        retries_c = cols.retries
+        check_overrun = retry is not None and retry.reroute_on_overrun
+        overrun_margin = retry.overrun_margin_ms if retry is not None else 0.0
+
         arrival_c, t_input_c, t_sla_c = cols.arrival, cols.t_input, cols.t_sla
         enq_c, sstart_c, service_c = cols.enqueue, cols.sstart, cols.service
         finish_c, depart_c = cols.finish, cols.depart
@@ -300,21 +338,88 @@ class ServingSimulator:
         needs_waits = router.queue_aware or router.admission.needs_w_queue
 
         def start_service(replica: Replica, now: float) -> None:
-            rid = replica.pop_request()
-            # A speculatively-routed request (lookahead batching) may be
-            # popped before its uplink completes; service cannot start
-            # before the input is on the server.  No-op without lookahead.
-            t_enq = enq_c[rid]
-            if now < t_enq:
-                now = t_enq
-            sstart_c[rid] = now
-            mid = model_c[rid]
-            store.observe_queue(names[mid], now - t_enq)
-            t_inf = svc.sample(rng, names[mid], replica.speed)
-            service_c[rid] = t_inf
-            replica.current = rid
-            replica.busy_until = now + t_inf
-            evq.push(now + t_inf, FINISH, (replica, rid))
+            # With an armed overrun hedge, requests whose believed
+            # service time no longer fits their remaining budget are
+            # diverted to the recovery path instead of being served into
+            # a certain miss; the loop walks the FIFO until one request
+            # is serveable.  Without a retry policy the loop body runs
+            # exactly once — op-for-op the historical single-pop path.
+            pending_div: List[int] = []
+            while replica.queue:
+                rid = replica.pop_request()
+                # A speculatively-routed request (lookahead batching) may
+                # be popped before its uplink completes; service cannot
+                # start before the input is on the server.  No-op without
+                # lookahead.
+                t_enq = enq_c[rid]
+                t0 = now if now >= t_enq else t_enq
+                mid = model_c[rid]
+                if check_overrun:
+                    remaining = (t_sla_c[rid] - 2.0 * t_input_c[rid]
+                                 - (t0 - t_enq))
+                    # The hedge consults the store's *live* belief (not
+                    # the FINISH-synced mu_now cache): a staleness-decayed
+                    # presented μ is an explicit invitation to re-probe,
+                    # and vetoing it here would exile the model forever.
+                    if profiles[mid].mu / replica.speed > \
+                            remaining + overrun_margin:
+                        pending_div.append(rid)
+                        continue
+                sstart_c[rid] = t0
+                store.observe_queue(names[mid], t0 - t_enq)
+                t_inf = svc.sample(rng, names[mid], replica.speed)
+                service_c[rid] = t_inf
+                replica.current = rid
+                replica.busy_until = t0 + t_inf
+                evq.push(t0 + t_inf, FINISH, (replica, rid, replica.gen))
+                break
+            # Diversions are flushed after the serve decision so a
+            # re-placement landing back on this replica re-enters
+            # ``start_service`` against settled state (recursion is
+            # bounded by the per-request attempt budget).
+            for rid in pending_div:
+                reroute(rid, now, "deadline overrun")
+
+        def place(rid: int, mid: int, now: float) -> None:
+            """Recovery placement: enqueue ``rid`` on the best live
+            replica of model ``mid`` (reject when none survives)."""
+            model_c[rid] = mid
+            replica = self.pool.best_for(names[mid], now, store)
+            if replica is None:
+                reject(rid, "no live replica for " + names[mid],
+                       max(now, enq_c[rid]), now)
+                return
+            replica_c[rid] = replica_index[id(replica)]
+            if replica.full():
+                reject(rid, "replica queue full", max(now, enq_c[rid]), now)
+                return
+            replica.enqueue(rid, mid)
+            depth = replica.depth()
+            if depth > replica.peak_depth:
+                replica.peak_depth = depth
+            if replica.current is None:
+                start_service(replica, now)
+
+        def reroute(rid: int, now: float, why: str) -> None:
+            """Recovery path: replica failure or deadline overrun.  With
+            attempts left, re-route to the cheapest still-viable model
+            within the *remaining* budget (deterministic, draw-free —
+            ``router.retry``); otherwise the request is rejected."""
+            if retry is None or retries_c[rid] + 1 >= retry.max_attempts:
+                reject(rid, why + (" (attempts exhausted)"
+                                   if retry is not None else ""),
+                       max(now, enq_c[rid]), now)
+                return
+            remaining = (t_sla_c[rid] - 2.0 * t_input_c[rid]
+                         - (now - enq_c[rid]))
+            mid = router.reroute_one(
+                remaining, w_queue_map=self.pool.waits_by_name(now, store))
+            if mid < 0:
+                reject(rid, why + "; no viable model within the "
+                       "remaining budget", max(now, enq_c[rid]), now)
+                return
+            retries_c[rid] += 1
+            place(rid, int(mid), now)
 
         def issue_next_closed_loop(now: float) -> None:
             nonlocal n_issued
@@ -343,6 +448,10 @@ class ServingSimulator:
                 rid = ev.data
                 arrival_c[rid] = now
                 t_in = float(self.network.sample_one(rng))
+                # NetworkDrift: scale after the draw so the RNG stream
+                # is untouched (drift-free runs multiply by nothing).
+                if net_scale != 1.0:
+                    t_in *= net_scale
                 t_input_c[rid] = t_in
                 evq.push(now + t_in, ENQUEUE, rid)
                 if not closed_loop and n_issued < n:
@@ -397,6 +506,10 @@ class ServingSimulator:
                     model_c[rid] = mid
                     fallback_c[rid] = fb
                     replica = self.pool.best_for(names[mid], now, store)
+                    if replica is None:
+                        reject(rid, "no live replica for " + names[mid],
+                               now, now)
+                        continue
                     replica_c[rid] = replica_index[id(replica)]
                     if replica.full():
                         reject(rid, "replica queue full", now, now)
@@ -429,13 +542,20 @@ class ServingSimulator:
                     model_c[rid] = mid
                     fallback_c[rid] = res.fallback[j]
                     ridx = int(res.replica_idx[j])
-                    if ridx >= 0:
+                    if ridx >= 0 and pool_replicas[ridx].accepting:
                         # Charged placement: the replica the router's
                         # ledger charged this pick to.
                         replica = pool_replicas[ridx]
                     else:
+                        # No charged placement — or the ledger's argmin
+                        # landed on a dead replica (every candidate at
+                        # inf): fall back to the live-pool pick.
                         replica = self.pool.best_for(names[mid], now,
                                                      store)
+                        if replica is None:
+                            reject(rid, "no live replica for " + names[mid],
+                                   max(now, enq_c[rid]), now)
+                            continue
                         ridx = replica_index[id(replica)]
                     replica_c[rid] = ridx
                     if replica.full():
@@ -452,7 +572,12 @@ class ServingSimulator:
                         start_service(replica, now)
 
             elif ev.kind == FINISH:
-                replica, rid = ev.data
+                replica, rid, gen = ev.data
+                if gen != replica.gen:
+                    # Stale completion: the replica was killed (and its
+                    # incarnation bumped) after this FINISH was pushed;
+                    # the victim has already been rerouted or rejected.
+                    continue
                 finish_c[rid] = now
                 replica.current = None
                 replica.n_served += 1
@@ -482,6 +607,35 @@ class ServingSimulator:
                     evq.push(arrivals.next_after(rng, now, n_issued),
                              ARRIVAL, n_issued)
                     n_issued += 1
+
+            elif ev.kind == FAULT:
+                f = ev.data
+                if isinstance(f, ReplicaFault):
+                    r = replica_by_name[f.replica]
+                    if f.kind == "kill":
+                        # Collect the in-flight request and the FIFO
+                        # *before* the transition (kill() clears both and
+                        # bumps the incarnation, orphaning the stale
+                        # FINISH), then push every victim through the
+                        # recovery path.
+                        victims: List[int] = []
+                        if r.current is not None:
+                            victims.append(int(r.current))
+                        while r.queue:
+                            victims.append(r.pop_request())
+                        r.kill()
+                        for vid in victims:
+                            reroute(vid, now, "replica failure")
+                    elif f.kind == "degrade":
+                        r.degrade(f.factor)
+                    elif f.kind == "drain":
+                        r.drain()
+                    else:   # recover
+                        r.recover()
+                elif isinstance(f, LatencyDrift):
+                    svc.set_drift(f.model, f.mu_mult, f.sigma_mult)
+                else:       # NetworkDrift
+                    net_scale = f.rtt_mult
 
         # Per-run request records stay inspectable (per-SLA-class slicing
         # in tests and frontier studies reads them after run()) —
@@ -520,7 +674,8 @@ class ServingSimulator:
             service_start_ms=float(c.sstart[rid]),
             service_ms=float(c.service[rid]),
             finish_ms=float(c.finish[rid]),
-            depart_ms=float(c.depart[rid]))
+            depart_ms=float(c.depart[rid]),
+            retries=int(c.retries[rid]))
 
     @property
     def completed_requests(self) -> List[SimRequest]:
@@ -535,6 +690,61 @@ class ServingSimulator:
             self._rejected_objs = [self._make_request(r)
                                    for r in self._rejected_rids]
         return self._rejected_objs
+
+    # ------------------------------------------------------------------
+    def attainment_timeline(self, bucket_ms: float = 10_000.0
+                            ) -> List[Dict[str, float]]:
+        """Post-run time series over ``bucket_ms`` windows of enqueue
+        time: one row per bucket with SLA attainment (rejections count
+        as misses, like the run-level number), shed rate, mean accuracy
+        over the bucket's completions, and recovery re-placements.  The
+        dip-and-recovery chart of ``benchmarks/drift_resilience.py``
+        reads this directly."""
+        c = self._cols
+        assert c is not None, "attainment_timeline requires a prior run()"
+        ci = np.asarray(self._completed_rids, dtype=np.int64)
+        rj = np.asarray(self._rejected_rids, dtype=np.int64)
+        last = 0.0
+        if len(ci):
+            last = float(c.enqueue[ci].max())
+        if len(rj):
+            last = max(last, float(c.enqueue[rj].max()))
+        n_b = int(last // bucket_ms) + 1
+        total = np.zeros(n_b)
+        met = np.zeros(n_b)
+        shed = np.zeros(n_b)
+        acc = np.zeros(n_b)
+        done = np.zeros(n_b)
+        retr = np.zeros(n_b)
+        acc_by_id = np.array([e.top1 / 100.0 for e in self.entries])
+        if len(ci):
+            b = (c.enqueue[ci] // bucket_ms).astype(np.int64)
+            e2e = (2.0 * c.t_input[ci] + (c.sstart[ci] - c.enqueue[ci])
+                   + c.service[ci])
+            np.add.at(total, b, 1.0)
+            np.add.at(done, b, 1.0)
+            np.add.at(met, b, (e2e <= c.t_sla[ci]).astype(np.float64))
+            np.add.at(acc, b, acc_by_id[c.model[ci]])
+            np.add.at(retr, b, c.retries[ci].astype(np.float64))
+        if len(rj):
+            b = (c.enqueue[rj] // bucket_ms).astype(np.int64)
+            np.add.at(total, b, 1.0)
+            np.add.at(shed, b, 1.0)
+            np.add.at(retr, b, c.retries[rj].astype(np.float64))
+        rows: List[Dict[str, float]] = []
+        for i in range(n_b):
+            n_i = total[i]
+            if n_i == 0:
+                continue
+            rows.append({
+                "t_ms": i * bucket_ms,
+                "n": int(n_i),
+                "attainment": float(met[i] / n_i),
+                "shed_rate": float(shed[i] / n_i),
+                "accuracy": float(acc[i] / done[i]) if done[i] else 0.0,
+                "retries": int(retr[i]),
+            })
+        return rows
 
     # ------------------------------------------------------------------
     # SoA summary: every statistic is a vectorized reduction over the
@@ -580,6 +790,7 @@ class ServingSimulator:
         rj = np.asarray(rejected, dtype=np.int64)
         per_class = self._per_class_cols(cols, completed, rejected, labels,
                                          truth, acc_of)
+        n_retries = int(cols.retries.sum())
         if not completed:
             return LoadSimResult(
                 policy=policy_name, t_sla=t_sla,
@@ -587,7 +798,8 @@ class ServingSimulator:
                 sla_attainment=0.0, mean_accuracy=0.0, mean_latency=0.0,
                 p50_latency=0.0, p99_latency=0.0, mean_queue_wait=0.0,
                 p99_queue_wait=0.0, peak_queue_depth=0, model_usage={},
-                replica_utilization={}, per_class=per_class)
+                replica_utilization={}, per_class=per_class,
+                n_retries=n_retries)
         model_ids = {name: i for i, name in enumerate(truth)}
         ci = np.asarray(completed, dtype=np.int64)
         t_input = cols.t_input[ci]
@@ -629,7 +841,8 @@ class ServingSimulator:
             replica_utilization={r.name: r.busy_ms / horizon
                                  for r in self.pool.replicas},
             horizon_ms=horizon,
-            per_class=per_class)
+            per_class=per_class,
+            n_retries=n_retries)
 
     @staticmethod
     def _per_class_cols(cols: _Columns, completed: List[int],

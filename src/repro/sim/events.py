@@ -16,6 +16,9 @@ ARRIVAL = "arrival"    # request leaves the device; uplink transfer starts
 ENQUEUE = "enqueue"    # input arrived at the server; select model + queue
 FINISH = "finish"      # inference finished on a replica
 DEPART = "depart"      # downlink done; response reached the device
+# Environment events (not tied to one request): replica lifecycle faults
+# and ground-truth drift, scheduled on the same queue (``sim/faults.py``).
+FAULT = "fault"
 
 
 class Event(NamedTuple):

@@ -43,6 +43,18 @@ from repro.router.charging import ChargedWaits
 # from O(depth) into O(n_models).
 EXACT_WALK_MAX = 64
 
+# Replica health states (fault injection, ``sim/faults.py``): UP and
+# DEGRADED accept new work; DRAINING finishes its queue but accepts
+# nothing; DOWN serves nothing.  ``Replica.accepting`` caches the
+# accepts-new-work predicate so the wait-column hot path reads one bool.
+UP = "up"
+DEGRADED = "degraded"
+DRAINING = "draining"
+DOWN = "down"
+HEALTH_STATES = (UP, DEGRADED, DRAINING, DOWN)
+
+_INF = float("inf")
+
 
 @dataclass
 class GaussianServiceModel:
@@ -53,13 +65,41 @@ class GaussianServiceModel:
     spike_mult: float = 10.0
     floor_ms: float = 0.05
 
+    # Mid-run latency drift (``sim/faults.py`` LatencyDrift): absolute
+    # multipliers vs the seeded truth, keyed by model name.  The shared
+    # ZooEntry truth objects are never mutated; empty dicts take the
+    # historical branch, so no-drift runs are draw-for-draw identical.
+    mu_scale: Dict[str, float] = field(default_factory=dict)
+    sigma_scale: Dict[str, float] = field(default_factory=dict)
+
     def sample(self, rng: np.random.Generator, model: str,
                speed: float = 1.0) -> float:
         e = self.truth[model]
-        t = max(self.floor_ms, rng.normal(e.mu_ms, e.sigma_ms))
+        if self.mu_scale or self.sigma_scale:
+            mu = e.mu_ms * self.mu_scale.get(model, 1.0)
+            sg = e.sigma_ms * self.sigma_scale.get(model, 1.0)
+            t = max(self.floor_ms, rng.normal(mu, sg))
+        else:
+            t = max(self.floor_ms, rng.normal(e.mu_ms, e.sigma_ms))
         if self.spike_prob > 0 and rng.random() < self.spike_prob:
             t *= self.spike_mult
         return t / speed
+
+    def set_drift(self, model: str, mu_mult: float = 1.0,
+                  sigma_mult: float = 1.0) -> None:
+        """Apply a latency drift (absolute vs the seeded truth); 1.0
+        removes the scale so a fully-recovered process is again the
+        branch-free historical sampler."""
+        if model not in self.truth:
+            raise KeyError(f"unknown model {model!r}")
+        if mu_mult == 1.0:
+            self.mu_scale.pop(model, None)
+        else:
+            self.mu_scale[model] = float(mu_mult)
+        if sigma_mult == 1.0:
+            self.sigma_scale.pop(model, None)
+        else:
+            self.sigma_scale[model] = float(sigma_mult)
 
 
 @dataclass
@@ -82,6 +122,15 @@ class Replica:
     busy_ms: float = 0.0
     peak_depth: int = 0
 
+    # Health (fault injection): ``accepting`` caches "takes new work"
+    # so the wait-column hot path reads one bool per replica.  ``gen``
+    # is the incarnation token: a kill bumps it, invalidating FINISH
+    # events issued against the dead incarnation.
+    health: str = UP
+    accepting: bool = True
+    gen: int = 0
+    base_speed: Optional[float] = field(default=None, repr=False)
+
     # SoA binding (set by ReplicaPool.bind); None == legacy object mode.
     _model_of: Optional[Sequence[int]] = field(default=None, repr=False,
                                                init=False)
@@ -90,6 +139,40 @@ class Replica:
 
     def serves(self, model: str) -> bool:
         return not self.models or model in self.models
+
+    # -- health transitions (fault injection) ---------------------------
+    def kill(self) -> None:
+        """Hard failure: drop out of service.  The caller (engine FAULT
+        handler) reads ``current`` and drains ``queue`` *before* calling
+        this, then re-routes the victims; bumping ``gen`` invalidates
+        the in-flight FINISH event."""
+        self.health = DOWN
+        self.accepting = False
+        self.gen += 1
+        self.current = None
+        self.busy_until = 0.0
+
+    def degrade(self, factor: float) -> None:
+        """Slow down by ``factor`` (co-tenant pressure, thermal
+        throttling): still serving, still accepting.  Repeated degrades
+        compound against the *base* speed, not each other."""
+        if self.base_speed is None:
+            self.base_speed = self.speed
+        self.speed = self.base_speed / factor
+        self.health = DEGRADED
+
+    def drain(self) -> None:
+        """Stop accepting new work; finish what is queued."""
+        self.health = DRAINING
+        self.accepting = False
+
+    def recover(self) -> None:
+        """Back to full speed and accepting (from any state)."""
+        if self.base_speed is not None:
+            self.speed = self.base_speed
+            self.base_speed = None
+        self.health = UP
+        self.accepting = True
 
     def depth(self) -> int:
         return len(self.queue) + (1 if self.current is not None else 0)
@@ -139,6 +222,12 @@ class Replica:
         self.n_served = 0
         self.busy_ms = 0.0
         self.peak_depth = 0
+        self.health = UP
+        self.accepting = True
+        self.gen = 0
+        if self.base_speed is not None:
+            self.speed = self.base_speed
+            self.base_speed = None
         self._model_of = None
         self._mu = None
         self._counts = None
@@ -200,12 +289,25 @@ class ReplicaPool:
         return out
 
     def best_for(self, model: str, now: float,
-                 store: ProfileStore) -> Replica:
-        """Least-estimated-wait capable replica (ties: pool order)."""
+                 store: ProfileStore) -> Optional[Replica]:
+        """Least-estimated-wait capable *accepting* replica (ties: pool
+        order, matching the historical ``min``).  ``None`` when every
+        capable replica is down/draining — the caller rejects or
+        re-routes."""
         cands = self.candidates(model)
         if len(cands) == 1:
-            return cands[0]
-        return min(cands, key=lambda r: r.estimated_wait(now, store))
+            r = cands[0]
+            return r if r.accepting else None
+        best = None
+        best_w = _INF
+        for r in cands:
+            if not r.accepting:
+                continue
+            w = r.estimated_wait(now, store)
+            if w < best_w:
+                best_w = w
+                best = r
+        return best
 
     def queue_wait(self, model: str, now: float,
                    store: ProfileStore) -> float:
@@ -222,6 +324,9 @@ class ReplicaPool:
         assert self._cands is not None, "wait_columns requires bind()"
         ws = []
         for r in self.replicas:
+            if not r.accepting:
+                ws.append(_INF)
+                continue
             w = max(0.0, r.busy_until - now) if r.current is not None \
                 else 0.0
             q = r.queue

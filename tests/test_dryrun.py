@@ -22,7 +22,8 @@ def test_dryrun_cell_compiles_on_debug_mesh(arch, shape, tmp_path):
          "--shape", shape, "--mesh", "2x4", "--out", str(tmp_path)],
         env=env, capture_output=True, text=True, timeout=480, cwd=ROOT)
     assert proc.returncode == 0, proc.stdout[-2000:] + proc.stderr[-2000:]
-    out = json.load(open(tmp_path / f"{arch}__{shape}__2x4.json"))
+    with open(tmp_path / f"{arch}__{shape}__2x4.json") as fh:
+        out = json.load(fh)
     assert out["status"] == "ok"
     assert out["roofline"]["hlo_flops"] > 0
     assert out["cost"]["bytes_accessed"] > 0

@@ -1,0 +1,438 @@
+"""Fault injection & drift resilience: replica health states, inf wait
+columns, charged-state churn, profile-store sample hardening, the
+self-healing windowed store, retry/hedged-fallback, seeded fault
+determinism, and scenario fault/drift round trips (dict, JSON file,
+TOML file)."""
+import json
+import math
+
+import numpy as np
+import pytest
+
+from repro.core.netmodel import NetworkModel
+from repro.core.policy import ModiPick
+from repro.core.profiles import (FrozenProfileStore, ModelProfile,
+                                 ProfileStore, WindowedProfileStore)
+from repro.core.zoo import TABLE2
+from repro.router import (ChargedWaits, InferenceRequest, RetryPolicy,
+                          Router, cheapest_viable)
+from repro.scenario import Scenario, build_faults, build_retry
+from repro.scenario.registry import drift_scenario, faulty_scenario
+from repro.sim import (DEGRADED, DOWN, DRAINING, FAULT, UP, EventQueue,
+                       LatencyDrift, NetworkDrift, PoissonArrivals, Replica,
+                       ReplicaFault, ServingSimulator, per_model_replicas,
+                       schedule_faults, shared_replicas)
+
+NET = NetworkModel(40.0, 10.0)
+INF = float("inf")
+
+
+def _store(entries=("a", "b"), mus=(10.0, 20.0), cls=ProfileStore, **kw):
+    profiles = [ModelProfile(name=n, accuracy=0.5 + 0.1 * i, mu=m,
+                             n_obs=100)
+                for i, (n, m) in enumerate(zip(entries, mus))]
+    return cls(profiles, **kw)
+
+
+def _bound(pool, names=("a", "b"), mus=(10.0, 20.0)):
+    model_of = np.zeros(64, dtype=np.int64)
+    pool.bind(tuple(names), model_of, list(mus))
+    return pool
+
+
+# ----------------------------------------------------------------------
+# replica health states
+# ----------------------------------------------------------------------
+
+def test_health_transitions():
+    r = Replica(name="r0", speed=2.0)
+    assert r.health == UP and r.accepting and r.gen == 0
+
+    r.degrade(2.0)
+    assert r.health == DEGRADED and r.accepting
+    assert r.speed == 1.0
+    r.degrade(4.0)          # compounds against base speed, not itself
+    assert r.speed == 0.5
+
+    r.drain()
+    assert r.health == DRAINING and not r.accepting
+
+    r.recover()
+    assert r.health == UP and r.accepting and r.speed == 2.0
+
+    r.current = object()
+    r.kill()
+    assert r.health == DOWN and not r.accepting
+    assert r.gen == 1 and r.current is None
+
+    r.recover()
+    assert r.health == UP and r.accepting
+    assert r.gen == 1       # incarnation tokens never rewind
+
+
+def test_reset_restores_health():
+    r = Replica(name="r0", speed=3.0)
+    r.degrade(3.0)
+    r.kill()
+    r.reset()
+    assert r.health == UP and r.accepting and r.gen == 0
+    assert r.speed == 3.0 and r.base_speed is None
+
+
+def test_wait_columns_inf_for_non_accepting():
+    pool = _bound(shared_replicas(3))
+    pool.replicas[1].kill()
+    pool.replicas[2].drain()
+    ws = pool.wait_columns(now=0.0)
+    assert ws[0] == 0.0
+    assert ws[1] == INF and ws[2] == INF
+
+
+def test_best_for_skips_down_and_returns_none_when_all_dead():
+    pool = _bound(shared_replicas(3))
+    pool.replicas[0].kill()
+    r = pool.best_for("a", 0.0, None)
+    assert r is pool.replicas[1]          # pool-order tie-break survives
+    pool.replicas[1].drain()
+    pool.replicas[2].kill()
+    assert pool.best_for("a", 0.0, None) is None
+
+
+def test_best_for_single_candidate_down():
+    pool = _bound(per_model_replicas(TABLE2[:2], replicas_per_model=1),
+                  names=tuple(e.name for e in TABLE2[:2]),
+                  mus=[e.mu_ms for e in TABLE2[:2]])
+    pool.replicas[0].kill()
+    assert pool.best_for(TABLE2[0].name, 0.0, None) is None
+    assert pool.best_for(TABLE2[1].name, 0.0, None) is not None
+
+
+# ----------------------------------------------------------------------
+# satellite: charged-state under churn
+# ----------------------------------------------------------------------
+
+def test_charged_state_killed_replica_mid_batch():
+    """A replica killed between batches surfaces an inf column; every
+    charge of the rest of the batch lands on a survivor."""
+    pool = _bound(shared_replicas(3))
+    pool.replicas[0].kill()
+    cs = pool.charged_state(now=0.0)
+    assert cs.rep_wait[0] == INF
+    picks = {cs.charge(0) for _ in range(6)}
+    assert picks <= {1, 2} and 0 not in picks
+
+
+def test_charged_state_single_survivor():
+    pool = _bound(shared_replicas(3))
+    pool.replicas[0].kill()
+    pool.replicas[2].drain()
+    cs = pool.charged_state(now=0.0)
+    assert [cs.charge(1) for _ in range(4)] == [1, 1, 1, 1]
+    # charges still accrue on the survivor (model b: mu 20)
+    assert cs.rep_wait[1] == pytest.approx(80.0)
+
+
+def test_charged_waits_empty_candidate_set_rejected():
+    with pytest.raises(ValueError, match="no replica serves"):
+        ChargedWaits([0.0], [[]], [1.0], [10.0], ["a"])
+
+
+def test_model_waits_inf_propagates_to_router_maps():
+    """A model whose only replica is down presents an inf wait — the
+    recovery pick can never choose it."""
+    pool = _bound(per_model_replicas(TABLE2[:2], replicas_per_model=1),
+                  names=tuple(e.name for e in TABLE2[:2]),
+                  mus=[e.mu_ms for e in TABLE2[:2]])
+    pool.replicas[0].kill()
+    cs = pool.charged_state(now=0.0)
+    m = cs.as_map()
+    assert m[TABLE2[0].name] == INF
+    assert math.isfinite(m[TABLE2[1].name])
+
+
+# ----------------------------------------------------------------------
+# satellite: profile-store sample hardening
+# ----------------------------------------------------------------------
+
+@pytest.mark.parametrize("bad", [float("nan"), float("inf"),
+                                 float("-inf"), -1.0])
+def test_observe_rejects_invalid_samples(bad):
+    st = _store()
+    mu0, n0 = st["a"].mu, st["a"].n_obs
+    st.observe("a", bad)
+    st.observe_queue("a", bad)
+    assert st["a"].mu == mu0 and st["a"].n_obs == n0
+    assert st["a"].queue_obs == 0
+    assert st.n_rejected_samples == 2
+
+
+def test_observe_accepts_valid_after_rejects():
+    st = _store()
+    st.observe("a", float("nan"))
+    st.observe("a", 12.0)
+    assert st["a"].n_obs == 101
+    assert st.n_rejected_samples == 1
+
+
+def test_frozen_store_drops_everything_but_counts_rejects():
+    st = _store(cls=FrozenProfileStore)
+    st.observe("a", 999.0)
+    st.observe_queue("a", 5.0)
+    assert st["a"].mu == 10.0 and st["a"].n_obs == 100
+    assert st["a"].queue_obs == 0
+    assert st.n_rejected_samples == 0
+    st.observe("a", float("inf"))
+    assert st.n_rejected_samples == 1
+    assert st.cold_models() == []     # no re-probing in the ablation arm
+
+
+# ----------------------------------------------------------------------
+# the self-healing windowed store
+# ----------------------------------------------------------------------
+
+def _windowed(**kw):
+    kw.setdefault("window", 8)
+    kw.setdefault("stale_after", 10)
+    kw.setdefault("explore_bonus", 0.9)
+    st = _store(cls=WindowedProfileStore, **kw)
+    st.warm_seed("a", 100.0, 4.0)
+    st.warm_seed("b", 20.0, 1.0)
+    return st
+
+
+def test_windowed_tracks_step_change_within_one_window():
+    st = _windowed()
+    for _ in range(8):
+        st.mark_selected("a")
+        st.observe("a", 200.0)
+    assert st["a"].mu == pytest.approx(200.0)
+    assert st["a"].var == pytest.approx(0.0)
+
+
+def test_windowed_clears_stale_window_on_return_from_exile():
+    st = _windowed()
+    st.mark_selected("a")
+    st.observe("a", 50.0)
+    for _ in range(12):                  # > stale_after selections away
+        st.mark_selected("b")
+        st.observe("b", 20.0)
+    st.observe("a", 300.0)
+    # not a mixture of the pre-exile sample and the fresh one
+    assert st["a"].mu == pytest.approx(300.0)
+
+
+def test_windowed_staleness_decay_invites_reprobe():
+    st = _windowed()                     # stale_after=10, ramp=10
+    for k in range(25):
+        st.mark_selected("b")
+        st.observe("b", 20.0)
+        if k == 14:                      # age 15: half-way down the ramp
+            assert st["a"].mu == pytest.approx(
+                100.0 * (1.0 - 0.9 * 0.5))
+    # age 25 >= stale_after + ramp: the full optimism floor
+    assert st["a"].mu == pytest.approx(10.0)
+    assert st.staleness("a") == 25
+    # one real observation snaps the profile back to measured truth
+    st.observe("a", 220.0)
+    assert st["a"].mu == pytest.approx(220.0)
+
+
+def test_warm_seed_installs_belief_without_window_samples():
+    st = _windowed()
+    assert st["a"].mu == 100.0 and st["a"].n_obs == 1000
+    st.mark_selected("a")
+    st.observe("a", 7.0)
+    # first live sample speaks alone — no synthetic history dilutes it
+    assert st["a"].mu == pytest.approx(7.0)
+
+
+def test_windowed_rejects_invalid_samples_too():
+    st = _windowed()
+    st.observe("a", float("nan"))
+    assert st["a"].mu == 100.0
+    assert st.n_rejected_samples == 1
+
+
+# ----------------------------------------------------------------------
+# retry / hedged-fallback
+# ----------------------------------------------------------------------
+
+def test_retry_policy_validation():
+    with pytest.raises(ValueError):
+        RetryPolicy(max_attempts=0)
+    with pytest.raises(ValueError):
+        RetryPolicy(overrun_margin_ms=-1.0)
+
+
+def test_cheapest_viable_picks_smallest_total_within_budget():
+    tab = _store(entries=("a", "b", "c"), mus=(100.0, 20.0, 5.0)).table()
+    assert cheapest_viable(tab, None, 30.0) == 2
+    assert cheapest_viable(tab, {"c": 40.0}, 30.0) == 1
+    assert cheapest_viable(tab, None, 4.0) == -1
+    # a dead model's inf wait can never win
+    assert cheapest_viable(tab, {"c": INF, "b": INF}, 150.0) == 0
+
+
+def test_reroute_records_attempts_and_fallback_chain():
+    st = _store(entries=("a", "b"), mus=(100.0, 10.0))
+    router = Router(st, ModiPick(t_threshold=20.0))
+    req = InferenceRequest(t_sla_ms=400.0, t_input_ms=40.0)
+    d = router.route(req, np.random.default_rng(0))
+    assert d.admitted and d.attempts == 1 and d.fallback_chain == ()
+
+    d2 = router.reroute(d, remaining_budget_ms=15.0)
+    assert d2.admitted and d2.variant == "b"
+    assert d2.attempts == 2 and d2.fallback_chain == (d.variant,)
+
+    d3 = router.reroute(d2, remaining_budget_ms=1.0)
+    assert not d3.admitted and d3.attempts == 3
+    assert d3.fallback_chain == (d.variant, "b")
+    assert "remaining budget" in d3.reject_reason
+
+    s = router.stats()
+    assert s["n_retries"] == 2
+    assert s["n_retry_routed"] == 1 and s["n_retry_exhausted"] == 1
+
+
+# ----------------------------------------------------------------------
+# fault records + the engine
+# ----------------------------------------------------------------------
+
+def test_schedule_faults_orders_on_the_event_queue():
+    evq = EventQueue()
+    faults = (ReplicaFault(at_ms=50.0, kind="kill", replica="r0"),
+              LatencyDrift(at_ms=10.0, model="a", mu_mult=2.0),
+              NetworkDrift(at_ms=30.0, rtt_mult=1.5))
+    assert schedule_faults(evq, faults) == 3
+    times = []
+    while evq:
+        ev = evq.pop()
+        assert ev.kind == FAULT
+        times.append(ev.time)
+    assert times == [10.0, 30.0, 50.0]
+
+
+def test_replica_fault_kind_validated():
+    with pytest.raises(ValueError):
+        ReplicaFault(at_ms=0.0, kind="explode", replica="r0")
+
+
+def test_engine_validates_fault_targets():
+    sim = ServingSimulator(
+        TABLE2, NET, shared_replicas(2), seed=1,
+        faults=[ReplicaFault(at_ms=10.0, kind="kill", replica="nope")])
+    with pytest.raises(ValueError, match="nope"):
+        sim.run(ModiPick(t_threshold=20.0), 250.0, 10,
+                arrivals=PoissonArrivals(5.0))
+    sim = ServingSimulator(
+        TABLE2, NET, shared_replicas(2), seed=1,
+        faults=[LatencyDrift(at_ms=10.0, model="nope", mu_mult=2.0)])
+    with pytest.raises(ValueError, match="nope"):
+        sim.run(ModiPick(t_threshold=20.0), 250.0, 10,
+                arrivals=PoissonArrivals(5.0))
+
+
+def _faulty_run(retry):
+    sim = ServingSimulator(
+        TABLE2, NET, shared_replicas(2), seed=7, queue_aware=True,
+        faults=[ReplicaFault(at_ms=3_000.0, kind="kill", replica="r0"),
+                ReplicaFault(at_ms=12_000.0, kind="recover",
+                             replica="r0")],
+        retry=retry)
+    res = sim.run(ModiPick(t_threshold=20.0), 250.0, 300,
+                  arrivals=PoissonArrivals(20.0))
+    return sim, res
+
+
+def test_kill_reroutes_victims_and_counts_them():
+    sim, res = _faulty_run(RetryPolicy(max_attempts=3))
+    s = sim.router.stats()
+    assert res.n_retries > 0
+    assert s["n_retry_routed"] == res.n_retries
+    assert res.n_completed + res.n_rejected == res.n_arrived
+
+
+def test_fault_run_is_seed_deterministic():
+    _, r1 = _faulty_run(RetryPolicy(max_attempts=3))
+    _, r2 = _faulty_run(RetryPolicy(max_attempts=3))
+    assert r1.mean_latency == r2.mean_latency
+    assert r1.sla_attainment == r2.sla_attainment
+    assert r1.n_retries == r2.n_retries
+
+
+def test_drift_changes_the_run():
+    def run(faults):
+        sim = ServingSimulator(TABLE2, NET,
+                               per_model_replicas(TABLE2,
+                                                  replicas_per_model=2),
+                               seed=5, queue_aware=True, faults=faults)
+        return sim.run(ModiPick(t_threshold=20.0), 250.0, 300,
+                       arrivals=PoissonArrivals(10.0))
+    clean = run(())
+    drifted = run([LatencyDrift(at_ms=5_000.0, model="NasNet-Large",
+                                mu_mult=3.0)])
+    assert drifted.mean_latency != clean.mean_latency
+    assert clean.sla_attainment >= drifted.sla_attainment
+
+
+def test_network_drift_scales_transfers():
+    def run(faults):
+        sim = ServingSimulator(TABLE2, NET, shared_replicas(2), seed=5,
+                               faults=faults)
+        return sim.run(ModiPick(t_threshold=20.0), 400.0, 200,
+                       arrivals=PoissonArrivals(10.0))
+    clean = run(())
+    shifted = run([NetworkDrift(at_ms=2_000.0, rtt_mult=3.0)])
+    assert shifted.mean_latency > clean.mean_latency
+
+
+# ----------------------------------------------------------------------
+# satellite: scenario fault/drift specs round-trip (dict, JSON, TOML)
+# ----------------------------------------------------------------------
+
+def test_fault_scenarios_round_trip_dict():
+    for sc in (drift_scenario(), faulty_scenario(),
+               faulty_scenario(retry=False)):
+        again = Scenario.from_dict(json.loads(json.dumps(sc.to_dict())))
+        assert again == sc
+
+
+def test_scenario_from_json_file(tmp_path):
+    sc = faulty_scenario()
+    p = tmp_path / "faulty.json"
+    p.write_text(json.dumps(sc.to_dict()))
+    assert Scenario.from_file(p) == sc
+
+
+def test_scenario_from_toml_file():
+    sc = Scenario.from_file("examples/drift.toml")
+    assert sc.name == "drift_demo"
+    assert len(sc.deployment.drifts) == 2
+    assert sc.deployment.drifts[0].model == "NasNet-Large"
+    assert sc.deployment.retry is not None
+    assert sc.deployment.retry.max_attempts == 2
+    assert sc.policy.profile == "window"
+    # the compiled engine inputs match the specs
+    faults = build_faults(sc)
+    assert [type(f).__name__ for f in faults] == ["LatencyDrift",
+                                                  "LatencyDrift"]
+    assert build_retry(sc).max_attempts == 2
+
+
+def test_fault_scenarios_require_single_epoch():
+    from repro.scenario import DeploymentSpec, FaultSpec, NetworkSpec, \
+        PolicySpec, WorkloadSpec
+    with pytest.raises(ValueError, match="epoch"):
+        Scenario(
+            name="bad",
+            workload=WorkloadSpec(arrival="poisson", rate_rps=5.0,
+                                  n_requests=100, t_sla_ms=250.0,
+                                  epochs=2,
+                                  rate_schedule=(5.0, 10.0)),
+            network=NetworkSpec(mean_ms=40.0, std_ms=10.0),
+            deployment=DeploymentSpec(
+                topology="shared",
+                faults=(FaultSpec(kind="kill", replica="r0",
+                                  at_ms=10.0),)),
+            policy=PolicySpec(policy="modipick",
+                              kwargs={"t_threshold": 20.0}))

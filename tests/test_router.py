@@ -522,6 +522,8 @@ def test_benchmarks_smoke_mode(tmp_path):
                    "scenario_suite/steady,",
                    "scenario_suite/class_mix/class_interactive,",
                    "scenario_suite/scale_up/epoch_4,",
+                   "drift_resilience/drift_mu2_window,",
+                   "drift_resilience/faulty_retry,",
                    "live_pool/modipick,"):
         assert marker in out.stdout, marker
     # smoke writes suffixed records so toy-scale rows can never clobber
