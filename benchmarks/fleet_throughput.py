@@ -1,0 +1,172 @@
+"""Fleet scaling, spill frontier, and batching ablation.
+
+Three arms, all built from ``scenario.registry.fleet_scenario``:
+
+- **Scaling**: weak scaling over cell count at a fixed per-cell load
+  (300 rps each, 1M requests per cell at full scale — the 10-cell row
+  simulates 10M requests).  Two ratios versus the 1-cell baseline:
+  ``goodput_frac`` (completed-in-SLA per simulated second vs C× the
+  1-cell goodput — does the fleet path preserve attainment at scale?)
+  and ``wall_frac`` (simulated requests per wall-second vs the 1-cell
+  run — does per-request simulator cost stay flat as the stacked
+  (cell × batch × pool) device call grows?).  Full scale asserts both
+  ≥ 0.7 at 10 cells.
+- **Spill frontier**: the 6-cell time-zone ring on the restricted
+  mid/heavy zoo (per-cell capacity ≈144 rps) replaying the Azure-style
+  day trace, swept over fleet load with spill on vs off at equal load.
+  Full scale asserts a frontier point where spill lifts global SLA
+  attainment by ≥ 0.10 — the headline cross-cell number.
+- **Batch window**: ``batch_window_ms ∈ {0, 5, 20}`` speculative
+  lookahead per cell on the 4-cell fleet (0 stays the engine default;
+  the lookahead golden in ``tests/test_engine_soa.py`` stays pinned).
+
+Fast/smoke mode shrinks every arm to toy scale and carries the
+tier-1-visible fleet guard: the 4-cell toy fleet must hold ≥ 0.9
+attainment AND ≥ 2.5× the 1-cell simulated goodput, so the spill
+planner regressing into its bang-bang failure mode (or the fleet path
+rotting outright) fails ``benchmarks/run.py --smoke``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import List, Sequence, Tuple
+
+# The restricted mid/heavy zoo: ≈144 rps per-cell capacity (Σ 1/μ), so
+# diurnal peaks genuinely saturate a cell and spill has work to do.
+HEAVY_SUBSET = ("DenseNet", "NasNet-Mobile", "InceptionV3",
+                "InceptionV4", "NasNet-Large")
+DAY_TRACE = "examples/azure_functions_day.csv"
+
+
+def _run_fleet(sc):
+    from repro.fleet.engine import FleetEngine
+    t0 = time.perf_counter()
+    fr = FleetEngine(sc).run()
+    return fr, time.perf_counter() - t0
+
+
+def _goodput_rps(sc, fr) -> float:
+    """Completed-in-SLA requests per simulated second."""
+    return sc.workload.rate_rps * fr.sla_attainment
+
+
+def scaling_rows(cells: Sequence[int] = (1, 4, 10),
+                 per_cell_rate: float = 300.0,
+                 per_cell_n: int = 1_000_000,
+                 fast: bool = False) -> List[Tuple[str, float, str]]:
+    from repro.scenario.registry import fleet_scenario
+
+    if fast:
+        cells, per_cell_rate, per_cell_n = (1, 4), 150.0, 1_200
+
+    rows: List[Tuple[str, float, str]] = []
+    base_goodput = base_wall_rps = None
+    for c in cells:
+        sc = fleet_scenario(n_cells=c, rate_rps=per_cell_rate * c,
+                            n_requests=per_cell_n * c, epoch_ms=10_000.0,
+                            seed=17, name=f"bench_fleet_scale_{c}")
+        fr, wall = _run_fleet(sc)
+        goodput = _goodput_rps(sc, fr)
+        wall_rps = fr.n_arrived / max(wall, 1e-9)
+        if base_goodput is None:
+            base_goodput, base_wall_rps = goodput, wall_rps
+        goodput_frac = goodput / (c * base_goodput)
+        wall_frac = wall_rps / base_wall_rps
+        rows.append((
+            f"fleet_throughput/scale_{c}cell",
+            wall * 1e6 / max(fr.n_arrived, 1),
+            f"n={fr.n_arrived};att={fr.sla_attainment:.4f};"
+            f"goodput_rps={goodput:.1f};goodput_frac={goodput_frac:.3f};"
+            f"wall_rps={wall_rps:.0f};wall_frac={wall_frac:.3f};"
+            f"spill_rate={fr.spill_rate:.4f}"))
+        if fast and c == 4:
+            # The tier-1-visible fleet guard (via run.py --smoke).
+            assert fr.sla_attainment >= 0.9, \
+                f"4-cell toy fleet attainment {fr.sla_attainment:.3f} < 0.9"
+            assert goodput >= 2.5 * base_goodput, \
+                (f"4-cell toy goodput {goodput:.1f} rps < 2.5x the "
+                 f"1-cell baseline {base_goodput:.1f} rps")
+        if not fast and c == 10:
+            assert goodput_frac >= 0.7, \
+                f"10-cell goodput scaling {goodput_frac:.3f} < 0.7x ideal"
+            assert wall_frac >= 0.7, \
+                f"10-cell wall-clock scaling {wall_frac:.3f} < 0.7x ideal"
+    return rows
+
+
+def frontier_rows(rates: Sequence[float] = (480.0, 540.0, 600.0, 660.0),
+                  n_requests: int = 30_000,
+                  fast: bool = False) -> List[Tuple[str, float, str]]:
+    from repro.scenario.registry import fleet_scenario
+
+    if fast:
+        rates, n_requests = (540.0,), 6_000
+
+    rows: List[Tuple[str, float, str]] = []
+    best_lift = 0.0
+    for rate in rates:
+        att = {}
+        for spill in (True, False):
+            sc = fleet_scenario(
+                n_cells=6, rate_rps=rate, n_requests=n_requests,
+                subset=HEAVY_SUBSET, trace_path=DAY_TRACE,
+                rotate_phases=True, spill=spill, spill_threshold_ms=40.0,
+                epoch_ms=5_000.0, period_ms=60_000.0, seed=19,
+                name=f"bench_fleet_frontier_{rate:g}_{spill}")
+            fr, wall = _run_fleet(sc)
+            att[spill] = fr.sla_attainment
+            if spill:
+                spill_rate, acc = fr.spill_rate, fr.mean_accuracy
+        lift = att[True] - att[False]
+        best_lift = max(best_lift, lift)
+        rows.append((
+            f"fleet_throughput/frontier_rate_{rate:g}",
+            wall * 1e6 / max(n_requests, 1),
+            f"att_spill={att[True]:.4f};att_nospill={att[False]:.4f};"
+            f"lift={lift:+.4f};spill_rate={spill_rate:.3f};"
+            f"acc={acc:.4f}"))
+    if not fast:
+        assert best_lift >= 0.10, \
+            (f"no frontier point with >=0.10 spill lift "
+             f"(best {best_lift:+.4f})")
+    return rows
+
+
+def window_rows(windows: Sequence[float] = (0.0, 5.0, 20.0),
+                n_requests: int = 200_000,
+                fast: bool = False) -> List[Tuple[str, float, str]]:
+    from repro.scenario.registry import fleet_scenario
+
+    if fast:
+        n_requests = 4_000
+
+    rows: List[Tuple[str, float, str]] = []
+    for w in windows:
+        sc = fleet_scenario(n_cells=4, rate_rps=480.0,
+                            n_requests=n_requests, epoch_ms=10_000.0,
+                            seed=17, name=f"bench_fleet_window_{w:g}")
+        sc = dataclasses.replace(sc, deployment=dataclasses.replace(
+            sc.deployment, batch_window_ms=w))
+        fr, wall = _run_fleet(sc)
+        nb = sum(e.router_stats.get("n_batches", 0) for e in fr.epochs)
+        mb = (sum(e.router_stats.get("mean_batch", 0.0)
+                  * e.router_stats.get("n_batches", 0)
+                  for e in fr.epochs) / nb) if nb else 0.0
+        rows.append((
+            f"fleet_throughput/window_{w:g}ms",
+            wall * 1e6 / max(fr.n_arrived, 1),
+            f"att={fr.sla_attainment:.4f};acc={fr.mean_accuracy:.4f};"
+            f"mean_batch={mb:.2f};lat={fr.mean_latency:.1f}"))
+    return rows
+
+
+def bench_rows(fast: bool = False) -> List[Tuple[str, float, str]]:
+    return (scaling_rows(fast=fast) + frontier_rows(fast=fast)
+            + window_rows(fast=fast))
+
+
+if __name__ == "__main__":
+    print("name,us_per_call,derived")
+    for row in bench_rows():
+        print(f"{row[0]},{row[1]:.3f},{row[2]}")

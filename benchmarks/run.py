@@ -28,6 +28,7 @@ def main() -> None:
 
     from benchmarks import drift_resilience as dr
     from benchmarks import engine_throughput as et
+    from benchmarks import fleet_throughput as ft
     from benchmarks import load_sweep as ls
     from benchmarks import paper_figures as pf
     from benchmarks import policy_throughput as pt
@@ -71,6 +72,10 @@ def main() -> None:
         # resilience assertion (adaptive post-drift attainment >= 0.9
         # and >= 2x the frozen-profile ablation)
         "drift_resilience": lambda: dr.bench_rows(fast=args.fast),
+        # multi-cell scaling + spill frontier + batch-window ablation;
+        # carries the tier-1-visible fleet guard (4-cell toy >= 0.9
+        # attainment and >= 2.5x the 1-cell goodput under --smoke)
+        "fleet_throughput": lambda: ft.bench_rows(fast=args.fast),
     }
     if args.smoke:
         # Toy pool (2 reduced-width variants, short cache, 6 requests):

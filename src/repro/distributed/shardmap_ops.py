@@ -77,6 +77,31 @@ def sharded_ssd_scan(x, dt, A, B_, C_, mesh: Mesh, *, chunk: int = 128):
             x, dt, A, B_, C_)
 
 
+def sharded_fleet_select(mu, sig, acc, rank, t_u, t_l, keys, mesh: Mesh,
+                         *, gamma: float = 1.0):
+    """Fleet-wide ModiPick selection with the cell axis sharded.
+
+    Every operand carries the cell on its leading axis — mu/sig/acc/rank
+    (C, npad), t_u/t_l (C, B), keys (C, 2) PRNG keys — and shards over
+    the mesh's ``cell`` axis (falling back to ``data`` when the fleet
+    mesh reuses the training mesh's naming).  Each device vmaps the
+    same jnp body (`kernels.policy_select.fleet_select_body`) over its
+    local cells, so the sharded call is bit-identical to the single
+    device `select_fleet_stacked` whenever C divides the axis; when it
+    does not, the divisibility-aware rule drops the mapping and the
+    call replicates (still correct, just not parallel)."""
+    from repro.distributed.sharding import axis_rules, logical_to_spec
+    from repro.kernels.policy_select import fleet_select_body
+
+    ax = next((a for a in ("cell", "data") if a in mesh.shape), None)
+    with axis_rules({"cell": ax}, mesh):
+        spec = logical_to_spec(("cell", None), shape=t_u.shape, mesh=mesh)
+    body = jax.vmap(partial(fleet_select_body, gamma=gamma))
+    return shard_map(body, mesh=mesh, in_specs=(spec,) * 7,
+                     out_specs=spec, check_rep=False)(
+                         mu, sig, acc, rank, t_u, t_l, keys)
+
+
 def sharded_rglru_scan(a, b, mesh: Mesh, *, block_s: int = 256):
     """a, b: (B, S, W) — batch over data, channels over 'model'."""
     dp = _data_axes(mesh)

@@ -1,0 +1,96 @@
+"""Device-side fleet selection: stacked per-cell pool operands and the
+one-call (cell × batch × pool) dispatch.
+
+Each cell serves its own zoo subset, so its
+:class:`~repro.kernels.policy_select.DevicePool` has its own width.  To
+judge every cell's pending batch in ONE device call, the per-cell pools
+are re-padded to the fleet-wide maximum width with the same sentinels
+the single-cell pool uses on padded lanes (``PAD_MU`` — never eligible;
+``PAD_RANK`` — never wins the stage-1 argmin), and stacked on a leading
+cell axis.  The stacked snapshot is frozen against one set of
+``ProfileTable`` snapshots — rebuild (cheap) when any cell's profiles
+move, exactly like ``ProfileTable.device_pool()``.
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.policy_select import (PAD_MU, PAD_RANK,
+                                         select_fleet_stacked)
+
+
+class StackedPools:
+    """(C, npad) pool operands for ``select_fleet`` — the fleet analogue
+    of :class:`~repro.kernels.policy_select.DevicePool`."""
+
+    __slots__ = ("C", "npad", "n", "mu", "sigma", "acc", "rank", "fastest")
+
+    def __init__(self, tables: Sequence):
+        pools = [t.device_pool() for t in tables]
+        self.C = len(pools)
+        if self.C == 0:
+            raise ValueError("StackedPools needs at least one cell table")
+        self.npad = max(p.npad for p in pools)
+        self.n = np.array([p.n for p in pools], dtype=np.int64)
+        self.fastest = np.array([p.fastest for p in pools], dtype=np.int64)
+
+        def stack(attr, value):
+            rows = []
+            for p in pools:
+                x = getattr(p, attr)
+                rows.append(jnp.pad(x, (0, self.npad - x.shape[0]),
+                                    constant_values=value))
+            return jnp.stack(rows)
+
+        self.mu = stack("mu", PAD_MU)
+        self.sigma = stack("sigma", 0.0)
+        self.acc = stack("acc", 1.0)
+        self.rank = stack("rank", PAD_RANK)
+
+
+def stack_cell_tables(tables: Sequence) -> StackedPools:
+    """Stack every cell's ``ProfileTable`` snapshot into one
+    :class:`StackedPools` (re-padded to the common width)."""
+    return StackedPools(tables)
+
+
+def select_fleet(stacked: StackedPools, t_u, t_l, *, gamma: float = 1.0,
+                 seed: int = 0, mesh: Optional[object] = None) -> np.ndarray:
+    """Every cell's judgment of every pending request in one call.
+
+    ``t_u``/``t_l``: (C, B) budget bounds — row ``c`` is what request
+    ``b``'s budget *would be* if served by cell ``c`` (home rows carry
+    no RTT; remote rows already subtract it).  Returns (C, B) int32
+    picks, −1 where cell ``c`` has no eligible variant for request
+    ``b`` — the frontend's viability matrix.
+
+    With a ``mesh`` whose ``cell`` (or ``data``) axis divides C, the
+    call runs under ``shard_map``
+    (``distributed.shardmap_ops.sharded_fleet_select``) — same jnp body,
+    one shard of cells per device.  Otherwise (the CPU test path, or a
+    non-divisible cell count) it is a single vmapped jit.
+    """
+    t_u = np.asarray(t_u, dtype=np.float32)
+    t_l = np.asarray(t_l, dtype=np.float32)
+    if t_u.shape != t_l.shape or t_u.ndim != 2 or t_u.shape[0] != stacked.C:
+        raise ValueError(f"budget bounds must be (C={stacked.C}, B); got "
+                         f"t_u {t_u.shape}, t_l {t_l.shape}")
+    if mesh is not None:
+        ax = next((a for a in ("cell", "data") if a in mesh.shape), None)
+        if ax is not None and stacked.C % mesh.shape[ax] == 0:
+            import jax
+            from repro.distributed.shardmap_ops import sharded_fleet_select
+            keys = jax.vmap(jax.random.fold_in, in_axes=(None, 0))(
+                jax.random.PRNGKey(seed),
+                jnp.arange(stacked.C, dtype=jnp.uint32))
+            out = sharded_fleet_select(
+                stacked.mu, stacked.sigma, stacked.acc, stacked.rank,
+                jnp.asarray(t_u), jnp.asarray(t_l), keys, mesh,
+                gamma=gamma)
+            return np.asarray(out)
+    return select_fleet_stacked(stacked.mu, stacked.sigma, stacked.acc,
+                                stacked.rank, t_u, t_l, gamma=gamma,
+                                seed=seed)

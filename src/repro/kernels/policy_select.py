@@ -292,6 +292,68 @@ def select_fused(pool: DevicePool, t_u, t_l, *, gamma: float = 1.0,
 
 
 # ======================================================================
+# Fleet selection: the fused pipeline over a leading cell axis.  Every
+# cell's pending batch is judged in ONE device call — (cell × batch ×
+# pool) operands in, (cell × batch) picks out.  The per-cell math is
+# exactly the `_fused_select` jnp path (stages 1–2, Eq. 3–4 utilities,
+# inverse-CDF draw); cells ride `jax.vmap`, and
+# `distributed.shardmap_ops.sharded_fleet_select` wraps the same body
+# under `shard_map` when a mesh carries a "cell" axis.  The jnp branch
+# is used on every backend (no Pallas inside the vmapped body), so the
+# call is bit-identical between CPU tests and sharded meshes.
+# ======================================================================
+
+def fleet_select_body(mu, sig, acc, rank, t_u, t_l, key, *,
+                      gamma: float = 1.0):
+    """One cell's fused selection, written to be vmapped/shard_mapped
+    over a leading cell axis.  mu/sig/acc/rank: (npad,) pool operands
+    (PAD_MU/PAD_RANK sentinels on lanes beyond the cell's own pool);
+    t_u/t_l: (B,) budget bounds; key: a PRNG key.  Returns (B,) int32
+    picks, −1 where no base model exists (the caller's shed/fallback
+    lane)."""
+    base, has_base, eligible = _stages12(mu, sig, rank, t_u, t_l)
+    w = _utilities(mu, sig, acc, t_u, t_l, eligible, gamma)
+    cdf = jnp.cumsum(w, axis=1)
+    total = cdf[:, -1]
+    r01 = jax.random.uniform(key, total.shape, dtype=cdf.dtype)
+    thresh = r01 * total
+    choice = jnp.argmax(cdf > thresh[:, None], axis=1).astype(jnp.int32)
+    choice = jnp.where(total > thresh, choice, base)
+    return jnp.where(has_base, choice, -1)
+
+
+@functools.lru_cache(maxsize=16)
+def _fleet_jit(npad: int, gamma: float):
+    """One compiled callable per (common pool width, gamma): cells ride
+    a vmap over the leading axis, batches bucket like `select_fused`."""
+    return jax.jit(jax.vmap(
+        functools.partial(fleet_select_body, gamma=gamma)))
+
+
+def select_fleet_stacked(mu, sig, acc, rank, t_u, t_l, *,
+                         gamma: float = 1.0, seed: int = 0) -> np.ndarray:
+    """All cells' pending batches as one device call.
+
+    ``mu/sig/acc/rank``: (C, npad) stacked pool operands (see
+    ``fleet.device.stack_cell_tables``); ``t_u``/``t_l``: (C, B) budget
+    bounds — row c is cell c's judgment of every pending request.
+    Returns (C, B) int32 numpy picks, −1 where cell c has no eligible
+    model for request b.  Each cell draws from its own fold of the
+    seed, so per-cell streams are decorrelated but deterministic."""
+    C, B = np.shape(t_u)
+    bpad = _bucket(B, 256)
+    pad2 = lambda x: np.pad(np.asarray(x, np.float32),
+                            ((0, 0), (0, bpad - B)))
+    keys = jax.vmap(jax.random.fold_in, in_axes=(None, 0))(
+        jax.random.PRNGKey(seed), jnp.arange(C, dtype=jnp.uint32))
+    fn = _fleet_jit(int(np.shape(mu)[1]), float(gamma))
+    out = fn(jnp.asarray(mu), jnp.asarray(sig), jnp.asarray(acc),
+             jnp.asarray(rank), jnp.asarray(pad2(t_u)),
+             jnp.asarray(pad2(t_l)), keys)
+    return np.asarray(out)[:, :B]
+
+
+# ======================================================================
 # Charged sequential-greedy selection: lax.scan over the batch, with the
 # per-replica wait ledger as the carry.
 # ======================================================================

@@ -37,17 +37,22 @@ class InferenceRequest:
 
 @dataclass(slots=True)
 class BudgetBreakdown:
-    """Where the SLA went: network, queueing, and what is left for
-    inference.  ``t_budget_ms`` is Eq. 1 (``T_sla − 2·T_input``);
-    ``t_effective_ms`` additionally charges the queue wait of the model
-    the decision routed to (the queue-aware budget)."""
+    """Where the SLA went: network, cross-cell transit, queueing, and
+    what is left for inference.  ``t_budget_ms`` is Eq. 1
+    (``T_sla − 2·T_input``) minus any inter-cell RTT the fleet frontend
+    spent spilling the request to a remote cell
+    (``rtt_xcell_ms`` — 0 for home-cell service, so single-cell budgets
+    are unchanged); ``t_effective_ms`` additionally charges the queue
+    wait of the model the decision routed to (the queue-aware budget):
+    ``T_sla − 2·T_input − RTT_xcell − W_queue(m)``."""
     t_sla_ms: float
     t_network_ms: float               # 2 · T_input (conservative, Eq. 1)
     w_queue_ms: float = 0.0           # W_queue of the chosen model
+    rtt_xcell_ms: float = 0.0         # inter-cell spill RTT (fleet only)
 
     @property
     def t_budget_ms(self) -> float:
-        return self.t_sla_ms - self.t_network_ms
+        return self.t_sla_ms - self.t_network_ms - self.rtt_xcell_ms
 
     @property
     def t_effective_ms(self) -> float:

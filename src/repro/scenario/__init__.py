@@ -21,7 +21,8 @@ from repro.scenario.build import (EpochResult, ScenarioHarness,
                                   build_engine, build_executor, build_faults,
                                   build_retry)
 from repro.scenario.registry import (drift_scenario, faulty_scenario,
-                                     get_scenario, list_scenarios, register)
+                                     fleet_scenario, get_scenario,
+                                     list_scenarios, register)
 from repro.scenario.spec import (AutoscalerSpec, DeploymentSpec, DriftSpec,
                                  FaultSpec, NetworkSpec, PolicySpec,
                                  RetrySpec, Scenario, SlaClass, WorkloadSpec)
@@ -35,5 +36,5 @@ __all__ = [
     "ScenarioHarness", "ScenarioResult", "EpochResult",
     "QueueTargetAutoscaler",
     "register", "get_scenario", "list_scenarios",
-    "drift_scenario", "faulty_scenario",
+    "drift_scenario", "faulty_scenario", "fleet_scenario",
 ]

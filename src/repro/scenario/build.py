@@ -213,6 +213,10 @@ class ScenarioResult:
     """A full scenario run: per-epoch results plus pooled headlines."""
     scenario: Scenario
     epochs: List[EpochResult] = field(default_factory=list)
+    # The full FleetResult when the scenario ran on the multi-cell
+    # fleet engine (spill counters, per-cell slices); None for the
+    # single-cell path.
+    fleet: Optional[object] = None
 
     @property
     def result(self):
@@ -337,6 +341,13 @@ class ScenarioHarness:
         """Run the scenario end to end on the discrete-event engine."""
         sc = self.scenario
         wl = sc.workload
+        fl = sc.deployment.fleet
+        if fl is not None and (fl.n_cells > 1 or fl.trace_path):
+            # Multi-cell (or trace-replaying) fleets run on the fleet
+            # engine; a 1-cell generative fleet stays on this path —
+            # that is the bit-identity guarantee the parity golden pins.
+            from repro.fleet.engine import FleetEngine
+            return FleetEngine(sc).run().as_scenario_result()
         policy = build_policy(sc)
         store = self.store()
         scaler = (QueueTargetAutoscaler(sc.deployment.autoscaler)

@@ -220,3 +220,67 @@ def faulty_scenario(*, retry: bool = True, n_requests: int = 1500,
 register(drift_scenario(name="drift"))
 register(drift_scenario(profile="frozen", name="drift_frozen"))
 register(faulty_scenario(name="faulty"))
+
+
+# ----------------------------------------------------------------------
+# the fleet family (sharded multi-cell serving)
+# ----------------------------------------------------------------------
+
+def fleet_scenario(*, n_cells: int = 4, rate_rps: float = 120.0,
+                   n_requests: int = 20_000, rtt_ms: float = 40.0,
+                   spill: bool = True, spill_threshold_ms: float = 0.0,
+                   replicas: int = 1, subset: tuple = (),
+                   trace_path: str = "",
+                   rotate_phases: bool = False,
+                   weights: Optional[tuple] = None,
+                   epoch_ms: float = 10_000.0, period_ms: float = 60_000.0,
+                   t_sla_ms: float = 250.0, seed: int = 17,
+                   name: Optional[str] = None) -> Scenario:
+    """A multi-cell fleet over the steady per-model deployment.
+
+    ``rate_rps`` is the FLEET-wide offered load; each cell receives its
+    weighted share on its own arrival timeline.  ``rotate_phases``
+    spreads the cells' diurnal peaks evenly around the day (cell i at
+    phase i/n — the time-zone ring), which only matters with a
+    ``trace_path`` or diurnal workload.  ``spill_threshold_ms`` arms
+    load-triggered spill on top of the default no-viable-variant
+    trigger."""
+    from repro.fleet.spec import CellSpec, FleetSpec
+    w = weights if weights is not None else (1.0,) * n_cells
+    cells = tuple(
+        CellSpec(name=f"cell{i}", weight=w[i],
+                 phase=(i / n_cells) if rotate_phases else 0.0)
+        for i in range(n_cells))
+    return Scenario(
+        name=name or f"fleet_{n_cells}cell",
+        workload=WorkloadSpec(arrival="poisson", rate_rps=rate_rps,
+                              n_requests=n_requests, t_sla_ms=t_sla_ms,
+                              period_ms=period_ms),
+        network=_NET,
+        deployment=DeploymentSpec(
+            topology="per_model", replicas=replicas, subset=subset,
+            fleet=FleetSpec(cells=cells, rtt_ms=rtt_ms, spill=spill,
+                            spill_threshold_ms=spill_threshold_ms,
+                            epoch_ms=epoch_ms, trace_path=trace_path)),
+        policy=PolicySpec(policy="modipick", kwargs={"t_threshold": 20.0},
+                          queue_aware=True),
+        seed=seed)
+
+
+# Balanced 4-cell fleet at the steady per-cell operating point (each
+# cell sees ~30 rps — the seeded golden's load): the healthy baseline.
+register(fleet_scenario(n_cells=4, rate_rps=120.0, n_requests=20_000,
+                        seed=17, name="fleet_steady"))
+
+# Six time zones replaying the same recorded day (Azure-Functions-style
+# rate trace, peak ≈ 2.1× mean), peaks rotated 4 h apart.  Cells run a
+# mid/heavy zoo slice sized for the *valley* (≈144 rps capacity vs a
+# ≈180 rps peak), so at any instant the cell at local evening runs hot
+# while the antipodal cells idle — the shape cross-cell spill exists
+# for.  Load-triggered spill is armed at a 40 ms queue-wait signal.
+register(fleet_scenario(n_cells=6, rate_rps=510.0, n_requests=30_000,
+                        subset=("DenseNet", "NasNet-Mobile", "InceptionV3",
+                                "InceptionV4", "NasNet-Large"),
+                        trace_path="examples/azure_functions_day.csv",
+                        rotate_phases=True, spill_threshold_ms=40.0,
+                        epoch_ms=5_000.0, seed=19, name="fleet_diurnal"))

@@ -31,7 +31,10 @@ from __future__ import annotations
 
 import dataclasses
 from dataclasses import dataclass, field
-from typing import Any, Dict, Mapping, Optional, Tuple
+from typing import Any, Dict, Mapping, Optional, TYPE_CHECKING, Tuple
+
+if TYPE_CHECKING:                    # pragma: no cover - type-only import
+    from repro.fleet.spec import FleetSpec
 
 ARRIVAL_KINDS = ("closed_loop", "poisson", "trace", "diurnal", "burst")
 TOPOLOGIES = ("per_model", "shared")
@@ -241,6 +244,11 @@ class DeploymentSpec:
     faults: Tuple[FaultSpec, ...] = ()
     drifts: Tuple[DriftSpec, ...] = ()
     retry: Optional[RetrySpec] = None
+    # Multi-cell fleet layer (``repro.fleet``): None = a single cell,
+    # the historical deployment.  The cell list, inter-cell RTT and
+    # spill policy live in the FleetSpec; per-cell overrides fall back
+    # to this deployment's zoo/topology/replicas.
+    fleet: Optional["FleetSpec"] = None
 
     def __post_init__(self):
         _require(self.zoo in ZOOS,
@@ -352,6 +360,25 @@ class Scenario:
             _require(self.workload.epochs == 1,
                      "fault/drift injection needs workload.epochs == 1 "
                      "(fault times reference the single-run timeline)")
+        fl = self.deployment.fleet
+        if fl is not None and fl.n_cells > 1:
+            # The fleet engine owns the clock (FleetSpec.epoch_ms) and
+            # synthesizes per-cell arrivals, so the workload must be a
+            # generative open-loop shape with a single logical epoch.
+            _require(self.workload.epochs == 1,
+                     "a multi-cell fleet needs workload.epochs == 1 "
+                     "(FleetSpec.epoch_ms is the rebalancing clock)")
+            _require(self.workload.arrival in ("poisson", "diurnal"),
+                     "a multi-cell fleet needs poisson or diurnal "
+                     f"arrivals, got {self.workload.arrival!r}")
+            _require(self.deployment.autoscaler is None,
+                     "fleet + autoscaler is not supported (cells have "
+                     "fixed replica topologies)")
+            _require(not self.deployment.faults
+                     and not self.deployment.drifts,
+                     "fleet + fault/drift injection is not supported")
+            _require(not self.workload.classes,
+                     "fleet + per-class SLA mixes is not supported yet")
 
     # -- serialization -------------------------------------------------
     def to_dict(self) -> Dict[str, Any]:
@@ -376,6 +403,9 @@ class Scenario:
             dep["drifts"] = tuple(DriftSpec(**s) for s in dep["drifts"])
         if dep.get("retry") is not None:
             dep["retry"] = RetrySpec(**dep["retry"])
+        if dep.get("fleet") is not None:
+            from repro.fleet.spec import FleetSpec
+            dep["fleet"] = FleetSpec.from_dict(dep["fleet"])
         _tupled(dep, "subset", "speeds")
         return cls(
             name=d["name"],

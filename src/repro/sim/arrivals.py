@@ -150,6 +150,109 @@ def diurnal_trace(n: int, base_rate_rps: float, *,
                                rate, seed))
 
 
+def rate_trace_arrivals(counts, *, n: int, rate_rps: float,
+                        period_ms: float = 86_400_000.0,
+                        phase: float = 0.0, seed: int = 0) -> TraceArrivals:
+    """Replay a *rate* trace (per-interval request counts — the shape
+    Azure Functions publishes) as explicit arrival timestamps.
+
+    ``counts`` (K,) is normalized to a piecewise-constant rate profile
+    over one cyclic ``period_ms`` "day" scaled so the *mean* rate is
+    ``rate_rps``, then thinned (Lewis–Shedler, like the synthesizers)
+    into ``n`` timestamps.  ``phase`` ∈ [0, 1) rotates the profile by a
+    fraction of the day — the fleet's time-zone offset: the same real
+    trace shape peaks at a different simulated hour in every cell.
+    Deterministic given ``seed``."""
+    c = np.asarray(counts, dtype=np.float64)
+    if c.ndim != 1 or c.size < 2:
+        raise ValueError("rate trace needs a 1-D array of >= 2 counts")
+    if not np.isfinite(c).all() or (c < 0).any():
+        raise ValueError("rate-trace counts must be finite and >= 0")
+    if c.sum() <= 0.0:
+        raise ValueError("rate trace is all-zero")
+    if not 0.0 <= phase < 1.0:
+        raise ValueError(f"phase must be in [0, 1), got {phase}")
+    if rate_rps <= 0.0 or period_ms <= 0.0 or n <= 0:
+        raise ValueError("need rate_rps > 0, period_ms > 0, n > 0")
+    shape = c / c.mean()                  # mean-1 profile
+    K = shape.size
+    off = phase * K
+
+    def rate(t):
+        k = int((t / period_ms * K + off) % K)
+        return rate_rps * shape[k]
+
+    return TraceArrivals(_thin(n, rate_rps * float(shape.max()),
+                               rate, seed))
+
+
+def load_rate_counts(path) -> np.ndarray:
+    """Parse a rate trace file into per-interval counts.
+
+    Accepted shapes (all real-world-trace friendly):
+
+    - **Azure-Functions CSV**: header rows with hash/trigger columns
+      followed by per-minute count columns ``1..1440`` — counts are
+      summed across functions per minute;
+    - **two-column CSV** ``interval,count`` (header optional);
+    - **one-column CSV**: one count per line;
+    - **JSON**: ``{"counts": [...]}`` or a bare list.
+    """
+    import json as _json
+    p = str(path)
+    if p.endswith(".json"):
+        with open(p, "r", encoding="utf-8") as f:
+            d = _json.load(f)
+        return np.asarray(d["counts"] if isinstance(d, dict) else d,
+                          dtype=np.float64)
+    import csv
+    with open(p, "r", encoding="utf-8", newline="") as f:
+        rows = [r for r in csv.reader(f) if r and any(x.strip() for x in r)]
+    if not rows:
+        raise ValueError(f"empty rate trace file: {p}")
+
+    def _num(x):
+        try:
+            return float(x)
+        except ValueError:
+            return None
+
+    header = [_num(x) for x in rows[0]]
+    if any(v is None for v in header):
+        # Header row: Azure format when >= 2 numeric-named columns
+        # (the per-minute "1".."1440" axis); else "interval,count".
+        minute_cols = [i for i, v in enumerate(header) if v is not None]
+        if len(minute_cols) >= 2:
+            body = rows[1:]
+            out = np.zeros(len(minute_cols), dtype=np.float64)
+            for r in body:
+                for j, i in enumerate(minute_cols):
+                    v = _num(r[i]) if i < len(r) else None
+                    out[j] += v if v is not None else 0.0
+            return out
+        rows = rows[1:]
+        if not rows:
+            raise ValueError(f"rate trace {p} has a header but no data")
+    if len(rows[0]) >= 2:
+        return np.asarray([float(r[1]) for r in rows], dtype=np.float64)
+    return np.asarray([float(r[0]) for r in rows], dtype=np.float64)
+
+
+def load_trace(path, *, n: int, rate_rps: float,
+               period_ms: float = 86_400_000.0, phase: float = 0.0,
+               seed: int = 0) -> TraceArrivals:
+    """Real-trace replay: parse an Azure-Functions-style CSV/JSON rate
+    trace (``load_rate_counts``) and render it to ``n`` arrival
+    timestamps at mean ``rate_rps`` over a ``period_ms`` day
+    (``rate_trace_arrivals``).  The ``fleet_diurnal`` scenario feeds
+    every cell the same file with a per-cell ``phase``, so diurnal load
+    rolling across time zones comes from a recorded shape instead of
+    the sinusoid synthesizer."""
+    return rate_trace_arrivals(load_rate_counts(path), n=n,
+                               rate_rps=rate_rps, period_ms=period_ms,
+                               phase=phase, seed=seed)
+
+
 def burst_trace(n: int, base_rate_rps: float, *, burst_rate_rps: float,
                 burst_every_ms: float = 10_000.0,
                 burst_len_ms: float = 1_000.0,

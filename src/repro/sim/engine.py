@@ -241,7 +241,8 @@ class ServingSimulator:
             warm: bool = True,
             store: Optional[ProfileStore] = None,
             sla_for: Optional[Callable[[int], float]] = None,
-            class_for: Optional[Callable[[int], str]] = None
+            class_for: Optional[Callable[[int], str]] = None,
+            extra_input_for=None
             ) -> LoadSimResult:
         """Simulate ``n_requests``.  ``sla_for(rid)`` (optional) assigns
         per-request SLAs; ``t_sla`` remains the reporting label and the
@@ -252,7 +253,18 @@ class ServingSimulator:
         materialized into SoA columns before the event loop starts
         (batched, in rid order); they never touch the RNG, so labelled
         runs stay draw-for-draw identical to unlabelled ones under the
-        same seed."""
+        same seed.
+
+        ``extra_input_for`` (optional; a ``(n,)`` array or an
+        ``rid -> ms`` callable) adds a deterministic per-request
+        constant to the *sampled* uplink time — the fleet layer's
+        cross-cell spill penalty (half the inter-cell RTT on each
+        direction, so ``2·T_input`` grows by exactly ``RTT_xcell`` and
+        every downstream budget — admission, queue-aware selection,
+        SLA scoring — judges the spilled request honestly).  Applied
+        after the network draw, so the RNG stream is untouched and
+        ``None`` (or all-zero) runs are bit-identical to the
+        historical engine."""
         arrivals = arrivals or ClosedLoopArrivals()
         rng = np.random.default_rng(self.seed)
         store = store or make_store(self.entries, alpha=self.alpha,
@@ -290,6 +302,16 @@ class ServingSimulator:
                     labels.append(lab)
                 cls_col[i] = code
         class_names = [lab if lab else None for lab in labels]
+        if extra_input_for is None:
+            extra_in = None
+        elif callable(extra_input_for):
+            extra_in = np.fromiter((float(extra_input_for(i))
+                                    for i in range(n)), np.float64, count=n)
+        else:
+            extra_in = np.asarray(extra_input_for, dtype=np.float64)
+            if extra_in.shape != (n,):
+                raise ValueError(f"extra_input_for array has shape "
+                                 f"{extra_in.shape}, expected ({n},)")
 
         # Replica binding: int queues + live per-model μ for the O(1)
         # wait estimates (the index-based free-list replacing the
@@ -452,6 +474,10 @@ class ServingSimulator:
                 # is untouched (drift-free runs multiply by nothing).
                 if net_scale != 1.0:
                     t_in *= net_scale
+                if extra_in is not None:
+                    # Cross-cell spill penalty: constant add after the
+                    # draw, same RNG-neutrality rule as NetworkDrift.
+                    t_in += extra_in[rid]
                 t_input_c[rid] = t_in
                 evq.push(now + t_in, ENQUEUE, rid)
                 if not closed_loop and n_issued < n:

@@ -1,0 +1,313 @@
+"""Fleet subsystem: 1-cell zero-RTT parity with the seeded golden,
+FleetSpec dict/JSON round trips (incl. single-cell back-compat),
+sticky-hash determinism and weight proportionality, spill-budget
+honesty (the RTT term), the stacked (cell × batch × pool) device
+selection vs the per-cell masks oracle, the shard_map path vs the
+single-device vmap (subprocess, fake devices), rate-trace loading, and
+a multi-cell end-to-end smoke with spill accounting."""
+import dataclasses
+import json
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from repro.fleet import (CellSpec, FleetEngine, FleetFrontend, FleetSpec,
+                         cell_view, select_fleet, stack_cell_tables)
+from repro.scenario import Scenario, build, get_scenario
+from repro.scenario.registry import fleet_scenario
+from repro.sim.arrivals import load_rate_counts, load_trace
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+# The seeded steady-scenario golden (tests/test_policy_vec.py pins the
+# same number): the 1-cell zero-RTT fleet must reproduce it exactly.
+GOLDEN_ATTAINMENT = 0.9983333333333333
+
+
+def _with_fleet(sc, fleet):
+    return dataclasses.replace(
+        sc, deployment=dataclasses.replace(sc.deployment, fleet=fleet))
+
+
+# ----------------------------------------------------------------------
+# parity: a 1-cell fleet is the single-cell system, bit for bit
+# ----------------------------------------------------------------------
+
+def test_one_cell_zero_rtt_fleet_matches_golden():
+    """Acceptance: wrapping the steady scenario in a 1-cell zero-RTT
+    FleetSpec changes nothing — pick for pick (model usage), shed for
+    shed (rejects), and the golden attainment to the last digit."""
+    sc = get_scenario("steady")
+    base = build(sc).run()
+    fl = FleetSpec(cells=(CellSpec("solo"),), rtt_ms=0.0)
+    wrapped = build(_with_fleet(sc, fl)).run()
+    assert base.result.sla_attainment == GOLDEN_ATTAINMENT
+    assert wrapped.result.sla_attainment == GOLDEN_ATTAINMENT
+    assert wrapped.result.mean_latency == base.result.mean_latency
+    assert wrapped.result.mean_accuracy == base.result.mean_accuracy
+    assert wrapped.result.n_rejected == base.result.n_rejected
+    assert wrapped.result.model_usage == base.result.model_usage
+
+    fr = FleetEngine(_with_fleet(sc, fl)).run()
+    assert fr.sla_attainment == base.result.sla_attainment
+    assert fr.n_spilled == 0 and fr.locality == 1.0
+
+
+# ----------------------------------------------------------------------
+# spec: round trips + validation + single-cell back-compat
+# ----------------------------------------------------------------------
+
+def test_fleet_spec_round_trips_through_json():
+    for name in ("fleet_steady", "fleet_diurnal"):
+        s = get_scenario(name)
+        assert s.deployment.fleet is not None
+        via_json = json.loads(json.dumps(s.to_dict()))
+        again = Scenario.from_dict(via_json)
+        assert again == s
+        assert isinstance(again.deployment.fleet, FleetSpec)
+        assert all(isinstance(c, CellSpec)
+                   for c in again.deployment.fleet.cells)
+
+
+def test_single_cell_dicts_stay_compatible():
+    """Pre-fleet serialized scenarios (no ``fleet`` key at all, or
+    ``fleet: null``) still load, and keep ``fleet is None``."""
+    sc = get_scenario("steady")
+    d = sc.to_dict()
+    assert d["deployment"].get("fleet") is None
+    assert Scenario.from_dict(d) == sc
+    d["deployment"].pop("fleet", None)
+    assert Scenario.from_dict(d).deployment.fleet is None
+
+
+def test_fleet_spec_validation():
+    with pytest.raises(ValueError, match="phase"):
+        CellSpec("a", phase=1.0)
+    with pytest.raises(ValueError, match="weight"):
+        CellSpec("a", weight=0.0)
+    with pytest.raises(ValueError, match="duplicate"):
+        FleetSpec(cells=(CellSpec("a"), CellSpec("a")))
+    with pytest.raises(ValueError, match="rtt_ms"):
+        FleetSpec(rtt_ms=-1.0)
+    with pytest.raises(ValueError, match="epoch_ms"):
+        FleetSpec(epoch_ms=0.0)
+    # multi-cell fleets reject features the fleet engine does not step
+    with pytest.raises(ValueError, match="fleet"):
+        _with_fleet(get_scenario("scale_up"),
+                    FleetSpec(cells=(CellSpec("a"), CellSpec("b"))))
+
+
+# ----------------------------------------------------------------------
+# frontend: sticky placement + spilled-budget honesty
+# ----------------------------------------------------------------------
+
+def test_sticky_hash_is_deterministic_and_weight_proportional():
+    sc = fleet_scenario(n_cells=3, weights=(6.0, 3.0, 1.0),
+                        name="t_sticky")
+    fe = FleetFrontend(sc)
+    rids = np.arange(200_000)
+    home = fe.home_of_requests(rids)
+    assert np.array_equal(home, fe.home_of_requests(rids))
+    # same user id -> same cell, always
+    uids = fe.uid_of(rids)
+    for u in np.unique(uids)[:50]:
+        assert np.unique(home[uids == u]).size == 1
+    frac = np.bincount(home, minlength=3) / rids.size
+    assert np.allclose(frac, (0.6, 0.3, 0.1), atol=0.02)
+
+
+def test_spilled_budget_pays_rtt_and_load():
+    """Honesty: row c of the budget matrix is T_sla − 2·T_input − L_c,
+    minus the cross-cell RTT exactly on non-home rows."""
+    sc = fleet_scenario(n_cells=3, rtt_ms=35.0, name="t_budget")
+    fe = FleetFrontend(sc)
+    home = np.array([0, 1, 2, 0])
+    load = np.array([5.0, 11.0, 23.0])
+    t_u, t_l = fe.budget_matrix(home, load)
+    for c in range(3):
+        for b, h in enumerate(home):
+            want = (sc.workload.t_sla_ms - fe.net2_ms[h] - load[c]
+                    - (35.0 if c != h else 0.0))
+            assert t_u[c, b] == pytest.approx(want)
+    assert np.allclose(t_u - t_l, fe.t_threshold)
+
+
+# ----------------------------------------------------------------------
+# device: stacked selection vs the per-cell masks oracle
+# ----------------------------------------------------------------------
+
+def test_select_fleet_stacked_agrees_with_per_cell_masks():
+    """Stacked picks are −1 exactly where the cell has no eligible
+    variant (per ``masks_device``, the pinned per-cell oracle), and
+    otherwise always land on an eligible, un-padded lane."""
+    from repro.kernels.policy_select import masks_device
+
+    sc = fleet_scenario(n_cells=3, name="t_stacked")
+    # Heterogeneous pools: cell 1 loses the heavy tail, cell 2 keeps
+    # only mid models — different npad per cell exercises re-padding.
+    views = [cell_view(sc, c) for c in sc.deployment.fleet.cells]
+    views[1] = dataclasses.replace(
+        views[1], deployment=dataclasses.replace(
+            views[1].deployment,
+            subset=("MobileNetV1-0.25", "SqueezeNet", "DenseNet")))
+    views[2] = dataclasses.replace(
+        views[2], deployment=dataclasses.replace(
+            views[2].deployment,
+            subset=("DenseNet", "NasNet-Mobile", "InceptionV3",
+                    "InceptionV4")))
+    from repro.scenario.build import ScenarioHarness
+    tables = [ScenarioHarness(v).store().table() for v in views]
+    stacked = stack_cell_tables(tables)
+
+    rng = np.random.default_rng(7)
+    B = 97    # deliberately unaligned with the 256 bucket
+    t_u = rng.uniform(2.0, 200.0, size=(3, B))
+    t_l = t_u - 20.0
+    picks = select_fleet(stacked, t_u, t_l, gamma=1.0, seed=5)
+    assert picks.shape == (3, B) and picks.dtype == np.int32
+    for c, tbl in enumerate(tables):
+        pool = tbl.device_pool()
+        _, has_base, elig = masks_device(pool, t_u[c], t_l[c])
+        assert np.array_equal(picks[c] == -1, ~has_base)
+        ok = picks[c] >= 0
+        assert (picks[c][ok] < pool.n).all()
+        assert elig[np.arange(B)[ok], picks[c][ok]].all()
+    # same seed -> same picks; different seed may differ
+    assert np.array_equal(
+        picks, select_fleet(stacked, t_u, t_l, gamma=1.0, seed=5))
+
+
+_SHARDED = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import jax, jax.numpy as jnp, numpy as np
+from repro.distributed.shardmap_ops import sharded_fleet_select
+from repro.kernels.policy_select import (PAD_MU, PAD_RANK,
+                                         select_fleet_stacked)
+
+C, npad, B = 8, 8, 256   # B on the 256 bucket: identical RNG shapes
+rng = np.random.default_rng(3)
+mu = np.full((C, npad), PAD_MU, np.float32)
+sig = np.zeros((C, npad), np.float32)
+acc = np.ones((C, npad), np.float32)
+rank = np.full((C, npad), PAD_RANK, np.float32)
+for c in range(C):
+    n = 3 + c % 5
+    mu[c, :n] = rng.uniform(3.0, 120.0, n)
+    sig[c, :n] = 0.1 * mu[c, :n]
+    acc[c, :n] = rng.uniform(0.5, 0.85, n)
+    rank[c, :n] = np.argsort(np.argsort(-acc[c, :n]))
+t_u = rng.uniform(2.0, 250.0, size=(C, B)).astype(np.float32)
+t_l = t_u - 20.0
+
+ref = select_fleet_stacked(mu, sig, acc, rank, t_u, t_l, gamma=1.0, seed=11)
+mesh = jax.make_mesh((8,), ("cell",))
+keys = jax.vmap(jax.random.fold_in, in_axes=(None, 0))(
+    jax.random.PRNGKey(11), jnp.arange(C, dtype=jnp.uint32))
+out = sharded_fleet_select(jnp.asarray(mu), jnp.asarray(sig),
+                           jnp.asarray(acc), jnp.asarray(rank),
+                           jnp.asarray(t_u), jnp.asarray(t_l), keys, mesh,
+                           gamma=1.0)
+assert np.array_equal(np.asarray(out), ref), "sharded != vmap"
+assert (np.asarray(out) == -1).any() and (np.asarray(out) >= 0).any()
+print("sharded fleet ok")
+"""
+
+
+def test_sharded_fleet_select_matches_vmap():
+    """shard_map over an 8-way fake-device cell mesh is bit-identical
+    to the single-device vmapped `select_fleet_stacked` (subprocess so
+    pytest's jax keeps 1 device)."""
+    env = dict(os.environ, PYTHONPATH=os.path.join(ROOT, "src"))
+    proc = subprocess.run([sys.executable, "-c", _SHARDED], env=env,
+                          capture_output=True, text=True, timeout=480,
+                          cwd=ROOT)
+    assert proc.returncode == 0, proc.stdout[-2000:] + proc.stderr[-2000:]
+    assert "sharded fleet ok" in proc.stdout
+
+
+# ----------------------------------------------------------------------
+# arrivals: rate-trace loading
+# ----------------------------------------------------------------------
+
+def test_load_trace_formats(tmp_path):
+    counts = [10, 30, 50, 30, 10, 5]
+    # JSON object and bare list
+    (tmp_path / "a.json").write_text(json.dumps({"counts": counts}))
+    (tmp_path / "b.json").write_text(json.dumps(counts))
+    # Azure-style CSV: numeric minute columns, one row per function
+    (tmp_path / "c.csv").write_text(
+        "HashOwner,HashFunction,1,2,3,4,5,6\n"
+        "o1,f1,4,12,20,12,4,2\n"
+        "o1,f2,6,18,30,18,6,3\n")
+    # two-column interval,count and bare one-column
+    (tmp_path / "d.csv").write_text(
+        "interval,count\n" + "\n".join(f"{i},{c}"
+                                       for i, c in enumerate(counts)))
+    (tmp_path / "e.csv").write_text("\n".join(str(c) for c in counts))
+    for fname in ("a.json", "b.json", "c.csv", "d.csv", "e.csv"):
+        got = load_rate_counts(str(tmp_path / fname))
+        assert np.allclose(got / got.sum(), np.array(counts) / sum(counts))
+        tr = load_trace(str(tmp_path / fname), n=4000, rate_rps=100.0,
+                        period_ms=60_000.0, seed=1)
+        t = np.asarray(tr.times_ms)
+        assert t.size == 4000 and (np.diff(t) >= 0).all()
+        # the peak bucket must out-arrive the valley bucket
+        k = (t % 60_000.0 / 60_000.0 * len(counts)).astype(int)
+        occ = np.bincount(k, minlength=len(counts))
+        assert occ[2] > 3 * occ[5]
+    with pytest.raises(ValueError, match="phase"):
+        load_trace(str(tmp_path / "a.json"), n=10, rate_rps=1.0, phase=1.0)
+    (tmp_path / "bad.json").write_text("[0, 0]")
+    with pytest.raises(ValueError, match="all-zero"):
+        load_trace(str(tmp_path / "bad.json"), n=10, rate_rps=1.0)
+
+
+# ----------------------------------------------------------------------
+# engine: multi-cell end to end
+# ----------------------------------------------------------------------
+
+def test_fleet_engine_multi_cell_smoke():
+    sc = fleet_scenario(n_cells=3, rate_rps=90.0, n_requests=3_000,
+                        epoch_ms=5_000.0, seed=23, name="t_fleet_e2e")
+    fr = FleetEngine(sc).run()
+    assert fr.n_arrived == 3_000
+    assert fr.n_completed + sum(e.result.n_rejected
+                                for e in fr.epochs) == 3_000
+    assert 0.0 <= fr.spill_rate <= 1.0
+    assert fr.locality == 1.0 - fr.spill_rate
+    assert fr.sla_attainment > 0.9
+    assert len(fr.epochs) >= 2
+    # every cell served traffic, and the merged per-epoch results carry
+    # per-cell replica utilization under cell-prefixed keys
+    served = sum(e.n_assigned for e in fr.epochs)
+    assert (served > 0).all()
+    keys = set()
+    for e in fr.epochs:
+        keys.update(e.result.replica_utilization)
+    assert any(k.startswith("cell0/") for k in keys)
+    assert any(k.startswith("cell2/") for k in keys)
+    # the ScenarioResult adapter exposes the same run to suite code
+    sr = fr.as_scenario_result()
+    assert sr.fleet is fr and len(sr.epochs) == len(fr.epochs)
+    assert sr.epochs[0].router_stats["n_routed"] > 0
+
+
+def test_fleet_spill_stays_off_when_disabled():
+    sc = fleet_scenario(n_cells=3, rate_rps=90.0, n_requests=2_000,
+                        spill=False, epoch_ms=5_000.0, seed=23,
+                        name="t_fleet_nospill")
+    fr = FleetEngine(sc).run()
+    assert fr.n_spilled == 0 and fr.locality == 1.0
+
+
+def test_harness_dispatches_multi_cell_fleet_to_fleet_engine():
+    sc = fleet_scenario(n_cells=2, rate_rps=60.0, n_requests=1_500,
+                        epoch_ms=5_000.0, seed=29, name="t_dispatch")
+    out = build(sc).run()
+    assert out.fleet is not None
+    assert out.fleet.n_cells == 2
+    assert sum(e.result.n_arrived for e in out.epochs) == 1_500

@@ -524,6 +524,9 @@ def test_benchmarks_smoke_mode(tmp_path):
                    "scenario_suite/scale_up/epoch_4,",
                    "drift_resilience/drift_mu2_window,",
                    "drift_resilience/faulty_retry,",
+                   "fleet_throughput/scale_4cell,",
+                   "fleet_throughput/frontier_rate_540,",
+                   "fleet_throughput/window_5ms,",
                    "live_pool/modipick,"):
         assert marker in out.stdout, marker
     # smoke writes suffixed records so toy-scale rows can never clobber

@@ -38,8 +38,8 @@ def test_round_trip_every_registered_scenario():
     """Acceptance: Scenario.from_dict(s.to_dict()) == s for every
     registered scenario, through actual JSON text."""
     names = list_scenarios()
-    assert {"steady", "diurnal", "burst", "class_mix",
-            "scale_up"} <= set(names)
+    assert {"steady", "diurnal", "burst", "class_mix", "scale_up",
+            "fleet_steady", "fleet_diurnal"} <= set(names)
     for name in names:
         s = get_scenario(name)
         d = s.to_dict()
