@@ -32,6 +32,7 @@ def main() -> None:
     from benchmarks import load_sweep as ls
     from benchmarks import paper_figures as pf
     from benchmarks import policy_throughput as pt
+    from benchmarks import premodel as pm
     from benchmarks import roofline as rl
     from benchmarks import scenario_suite as sc
 
@@ -76,6 +77,11 @@ def main() -> None:
         # carries the tier-1-visible fleet guard (4-cell toy >= 0.9
         # attainment and >= 2.5x the 1-cell goodput under --smoke)
         "fleet_throughput": lambda: ft.bench_rows(fast=args.fast),
+        # conditional-profile + tail-quantile routing; carries the
+        # tier-1-visible premodel guards (conditional >= +0.02 accuracy
+        # at equal attainment; p95 budgets beat mean budgets on tail
+        # attainment)
+        "premodel": lambda: pm.bench_rows(fast=args.fast),
     }
     if args.smoke:
         # Toy pool (2 reduced-width variants, short cache, 6 requests):

@@ -180,6 +180,11 @@ class ProfileStore:
         self.alpha = alpha
         self.cold_age = cold_age
         self.step = 0
+        # Monotone mutation counter: derived snapshots beyond the one
+        # cached table (per-class tables, stacked device pools) compare
+        # against it to detect staleness without subscribing to every
+        # observe call.  Bumped on accepted telemetry and invalidation.
+        self.version = 0
         self._table: Optional[ProfileTable] = None
         # Identity root for derived views: ``router.queueaware.shifted_store``
         # points its per-selection views back at the store they shadow, so
@@ -202,6 +207,7 @@ class ProfileStore:
         return self._table
 
     def invalidate(self) -> None:
+        self.version += 1
         self._table = None
 
     def observe(self, name: str, latency_ms: float) -> None:
@@ -210,6 +216,7 @@ class ProfileStore:
             return
         p = self.profiles[name]
         p.update(latency_ms, self.alpha)
+        self.version += 1
         self._refresh(name, p)
 
     def observe_queue(self, name: str, wait_ms: float) -> None:
@@ -218,6 +225,7 @@ class ProfileStore:
             return
         p = self.profiles[name]
         p.update_queue(wait_ms, self.alpha)
+        self.version += 1
         # Queue telemetry touches only the queue_mu column: μ/σ, the
         # accuracy order, ``fastest`` and the device/scalar caches are
         # all unaffected, so the patch is a single element write.
@@ -326,6 +334,7 @@ class WindowedProfileStore(ProfileStore):
         p.mu, p.var, p.n_obs = mu, var, n_obs
         self._raw[name] = (mu, var)
         self._seen[name] = self.step
+        self.version += 1
         self._refresh(name, p)
 
     def observe(self, name: str, latency_ms: float) -> None:
@@ -354,6 +363,7 @@ class WindowedProfileStore(ProfileStore):
         p = self.profiles[name]
         p.mu, p.var = mu, var
         p.n_obs += 1
+        self.version += 1
         self._refresh(name, p)
 
     def mark_selected(self, name: str) -> None:

@@ -412,8 +412,10 @@ class _EpochMerger:
             mean_latency=float(e2e.mean()),
             p50_latency=float(np.percentile(e2e, 50)),
             p99_latency=float(np.percentile(e2e, 99)),
+            p95_latency=float(np.percentile(e2e, 95)),
             mean_queue_wait=float(wait.mean()),
             p99_queue_wait=float(np.percentile(wait, 99)),
+            p95_queue_wait=float(np.percentile(wait, 95)),
             peak_queue_depth=self.peak_depth,
             model_usage={k: v / self.n_completed
                          for k, v in sorted(self.usage.items())},

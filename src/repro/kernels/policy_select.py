@@ -354,6 +354,111 @@ def select_fleet_stacked(mu, sig, acc, rank, t_u, t_l, *,
 
 
 # ======================================================================
+# Class-conditional selection: the fused pipeline with PER-REQUEST pool
+# operands.  The premodel layer keeps K per-class profile tables over
+# the same zoo (premodel.conditional.ConditionalProfileStore); a batch
+# carrying per-request input-class ids gathers each request's class row
+# out of the stacked (K, npad) mu/sigma operands and runs the identical
+# stage 1–3 math row-wise — ONE device call for the whole classed
+# batch, exactly like the fleet's stacked dispatch.  Accuracy (and the
+# stage-1 rank derived from it) never varies by class, so acc/rank stay
+# (npad,) and broadcast.  jnp on every backend (no Pallas inside), so
+# CPU tests and TPU runs are bit-identical.
+# ======================================================================
+
+def _stages12_rows(mu, sig, rank, t_u, t_l):
+    """Stages 1–2 with per-request pool rows.  mu/sig: (B, npad);
+    rank: (npad,); t_u/t_l: (B,).  Same math as :func:`_stages12`, with
+    the base row's μ/σ gathered per request instead of indexed from a
+    shared pool vector."""
+    tu, tl = t_u[:, None], t_l[:, None]
+    mus = mu + sig
+    elig1 = (mus < tu) & ((mu - sig) < tl)                   # Eq. 2, (B, npad)
+    has_base = elig1.any(axis=1)
+    base = jnp.argmin(jnp.where(elig1, rank[None, :], PAD_RANK + 1.0),
+                      axis=1).astype(jnp.int32)              # first in acc order
+    mu_base = jnp.take_along_axis(mu, base[:, None], axis=1)[:, 0]
+    sig_base = jnp.take_along_axis(sig, base[:, None], axis=1)[:, 0]
+    half = jnp.abs(t_l - mu_base) + sig_base                 # (B,)
+    lo, hi = (t_l - half)[:, None], (t_l + half)[:, None]
+    natural = (lo <= mu) & (mu <= hi) & (mus < tu)
+    eligible = natural | (jnp.arange(mu.shape[1])[None, :] == base[:, None])
+    eligible &= has_base[:, None]
+    return base, has_base, eligible
+
+
+def _utilities_rows(mu, sig, acc, t_u, t_l, eligible, gamma):
+    """Eq. 3–4 utilities with per-request μ/σ rows (same degenerate
+    fallback as :func:`_utilities`)."""
+    tu, tl = t_u[:, None], t_l[:, None]
+    num = tu - (mu + sig)
+    den = jnp.maximum(jnp.abs(tl - mu), EPS)
+    u = jnp.power(jnp.maximum(acc, EPS), gamma)[None, :] * num / den
+    u = jnp.where(eligible, u, 0.0)
+    total = jnp.sum(u, axis=1, keepdims=True)
+    good = jnp.isfinite(total) & (total > 0)
+    return jnp.where(good, u, eligible.astype(u.dtype))
+
+
+def _classed_select(mu_k, sig_k, acc, rank, cls, shifts, t_u, t_l, seed, *,
+                    gamma: float):
+    """The classed pipeline under one trace: gather each request's class
+    row, add the (class-independent) queue-wait shifts, then stages 1–3
+    and the inverse-CDF draw.  Returns (B,) int32 picks with the
+    no-base fallback resolved to the row's own fastest model, plus the
+    has_base mask."""
+    mu = mu_k[cls] + shifts[None, :]       # (B, npad); shifts are per-model
+    sig = sig_k[cls]
+    base, has_base, eligible = _stages12_rows(mu, sig, rank, t_u, t_l)
+    w = _utilities_rows(mu, sig, acc, t_u, t_l, eligible, gamma)
+    cdf = jnp.cumsum(w, axis=1)
+    total = cdf[:, -1]
+    r01 = jax.random.uniform(jax.random.PRNGKey(seed), total.shape,
+                             dtype=cdf.dtype)
+    thresh = r01 * total
+    choice = jnp.argmax(cdf > thresh[:, None], axis=1).astype(jnp.int32)
+    choice = jnp.where(total > thresh, choice, base)
+    # Fallback: the fastest model of the request's OWN class view
+    # (padded lanes carry PAD_MU and never win the argmin).
+    fb = jnp.argmin(mu, axis=1).astype(jnp.int32)
+    return jnp.where(has_base, choice, fb), has_base
+
+
+@functools.lru_cache(maxsize=32)
+def _classed_jit(K: int, npad: int, gamma: float):
+    return jax.jit(functools.partial(_classed_select, gamma=gamma))
+
+
+def select_classed(stacked, cls, t_u, t_l, *, shifts=None,
+                   gamma: float = 1.0, seed: int = 0,
+                   block_b: int = 256):
+    """Batched class-conditional ModiPick selection in one device call.
+
+    ``stacked``: a ``premodel.conditional.StackedClassPools`` — (K, npad)
+    per-class mu/sigma plus shared (npad,) acc/rank.  ``cls``: (B,)
+    int input-class ids; ``t_u``/``t_l``: (B,) budget bounds;
+    ``shifts``: optional (n,) per-model queue-wait shifts (identical
+    across classes — waits live at replicas, not input classes).
+    Returns ``(idx, has_base)`` numpy arrays with the fallback already
+    resolved to the per-class fastest model.
+    """
+    B = len(t_u)
+    bpad = _bucket(B, block_b)
+    cls_pad = np.zeros(bpad, np.int32)
+    cls_pad[:B] = np.asarray(cls, np.int32)
+    sh = np.zeros(stacked.npad, np.float32)
+    if shifts is not None:
+        sh[:len(shifts)] = np.asarray(shifts, np.float32)
+    fn = _classed_jit(stacked.k, stacked.npad, float(gamma))
+    idx, has_base = fn(stacked.mu, stacked.sigma, stacked.acc, stacked.rank,
+                       jnp.asarray(cls_pad), jnp.asarray(sh),
+                       jnp.asarray(_pad_batch(t_u, bpad)),
+                       jnp.asarray(_pad_batch(t_l, bpad)),
+                       np.uint32(seed & 0xFFFFFFFF))
+    return np.asarray(idx)[:B], np.asarray(has_base)[:B]
+
+
+# ======================================================================
 # Charged sequential-greedy selection: lax.scan over the batch, with the
 # per-replica wait ledger as the carry.
 # ======================================================================

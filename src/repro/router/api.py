@@ -33,6 +33,10 @@ class InferenceRequest:
     rid: int = 0
     arrival_ms: float = 0.0
     sla_class: Optional[str] = None   # optional label, e.g. "interactive"
+    # Cheap premodel features (input size, resolution bucket, ...): what
+    # the premodel classifier maps to an input-class id.  Empty for
+    # feature-less workloads — the historical path.
+    features: Tuple[float, ...] = ()
 
 
 @dataclass(slots=True)

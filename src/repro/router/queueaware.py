@@ -73,6 +73,7 @@ class _ShiftedView(ProfileStore):
         self.step = store.step
         self.base = store.base
         self._shift_src = store
+        self.version = 0
         self._shifts = shifts
         base = store.table()
         # Shifted snapshot assembled directly (same fields

@@ -26,6 +26,7 @@ import numpy as np
 
 from repro.core.netmodel import NetworkModel
 from repro.core.policy import Policy, make_policy
+from repro.core.profiles import ModelProfile
 from repro.core.zoo import PROTOTYPE_POOL, TABLE2, ZooEntry, make_store
 from repro.router.admission import AdmissionController, make_admission
 from repro.router.retry import RetryPolicy
@@ -46,6 +47,10 @@ _CLASS_SEED_SALT = 0x5C3
 # the thinning sampler and the engine the *same* PCG64 stream,
 # correlating inter-arrival gaps with network/service noise.
 _TRACE_SEED_SALT = 0xA221
+# And for input-class/feature assignment (the premodel workload mix):
+# its own stream keeps classed runs replaying the same arrival,
+# network and service draws as their unclassed twins.
+_INPUT_SEED_SALT = 0x1C7F
 
 
 # ----------------------------------------------------------------------
@@ -264,6 +269,8 @@ class ScenarioHarness:
         self.scenario = scenario
         self._class_names, self._class_slas, self._class_ids = \
             self._assign_classes()
+        self._input_ids, self._input_feats, self._input_scales = \
+            self._assign_input_classes()
         # Synthesized diurnal/burst traces are per-run constants; render
         # once here instead of re-thinning per epoch.
         self._times = build_arrival_times(scenario)
@@ -293,6 +300,50 @@ class ScenarioHarness:
             return None
         return lambda rid: self._class_names[self._class_ids[offset + rid]]
 
+    # -- per-request input-class assignment (the premodel workload) ----
+    def _assign_input_classes(self):
+        wl = self.scenario.workload
+        if not wl.input_classes:
+            return (np.empty(0, dtype=np.int64), np.empty((0, 0)),
+                    np.empty(0))
+        w = np.array([c.weight for c in wl.input_classes])
+        centers = np.array([c.feature_center for c in wl.input_classes],
+                           dtype=np.float64)
+        noise = np.array([c.feature_noise for c in wl.input_classes])
+        scales = np.array([c.latency_scale for c in wl.input_classes])
+        rng = np.random.default_rng(self.scenario.seed ^ _INPUT_SEED_SALT)
+        ids = rng.choice(len(w), size=wl.n_requests, p=w / w.sum())
+        feats = centers[ids] + noise[ids, None] * rng.standard_normal(
+            (wl.n_requests, centers.shape[1]))
+        return ids, feats, scales[ids]
+
+    def input_features(self, offset: int, n: int) -> Optional[np.ndarray]:
+        """This epoch slice's (n, d) feature rows (None without an
+        input-class mix)."""
+        if not len(self._input_ids):
+            return None
+        return self._input_feats[offset:offset + n]
+
+    def service_scales(self, offset: int, n: int) -> Optional[np.ndarray]:
+        """This epoch slice's true per-request service-time multipliers
+        (None without an input-class mix)."""
+        if not len(self._input_ids):
+            return None
+        return self._input_scales[offset:offset + n]
+
+    def premodel(self):
+        """A fresh premodel classifier per run (None when the policy
+        says "none").  Carried across epochs by ``run()`` like the
+        profile store, so what it learned keeps paying off."""
+        pol = self.scenario.policy
+        wl = self.scenario.workload
+        if pol.premodel == "none" or not wl.input_classes:
+            return None
+        from repro.premodel import make_classifier
+        centers = tuple(c.feature_center for c in wl.input_classes)
+        return make_classifier(pol.premodel, len(wl.input_classes),
+                               len(centers[0]), centers=centers)
+
     # -- entry-point factories -----------------------------------------
     def engine(self, n_replicas: Optional[int] = None,
                seed: Optional[int] = None):
@@ -306,11 +357,40 @@ class ScenarioHarness:
 
     def store(self):
         pol = self.scenario.policy
-        return make_store(build_entries(self.scenario), alpha=pol.alpha,
-                          cold_age=pol.cold_age, warm=pol.warm,
-                          profile=pol.profile, window=pol.window,
-                          stale_after=pol.stale_after,
-                          explore_bonus=pol.explore_bonus)
+        wl = self.scenario.workload
+        entries = build_entries(self.scenario)
+        q = pol.latency_quantile
+        if pol.premodel != "none" and wl.input_classes:
+            from repro.premodel import ConditionalProfileStore
+            store = ConditionalProfileStore(
+                [ModelProfile(name=e.name, accuracy=e.top1 / 100.0)
+                 for e in entries],
+                n_classes=len(wl.input_classes), q=q,
+                alpha=pol.alpha, cold_age=pol.cold_age)
+        elif q is not None:
+            from repro.premodel import QuantileProfileStore
+            store = QuantileProfileStore(
+                [ModelProfile(name=e.name, accuracy=e.top1 / 100.0)
+                 for e in entries],
+                q=q, alpha=pol.alpha, cold_age=pol.cold_age)
+        else:
+            return make_store(entries, alpha=pol.alpha,
+                              cold_age=pol.cold_age, warm=pol.warm,
+                              profile=pol.profile, window=pol.window,
+                              stale_after=pol.stale_after,
+                              explore_bonus=pol.explore_bonus)
+        if pol.warm:
+            # Same 1000-request warm-up as make_store: the trackers stay
+            # cold, so quantile presentation starts at the Gaussian
+            # μ + z_q·σ of the seeded truth and hands over to measured
+            # quantiles as observations arrive.
+            for e in entries:
+                p = store[e.name]
+                p.mu = e.mu_ms
+                p.var = e.sigma_ms ** 2
+                p.n_obs = 1000
+            store.invalidate()
+        return store
 
     # -- workload slicing ----------------------------------------------
     def epoch_sizes(self) -> List[int]:
@@ -350,6 +430,7 @@ class ScenarioHarness:
             return FleetEngine(sc).run().as_scenario_result()
         policy = build_policy(sc)
         store = self.store()
+        premodel = self.premodel()
         scaler = (QueueTargetAutoscaler(sc.deployment.autoscaler)
                   if sc.deployment.autoscaler is not None else None)
         n_replicas = sc.deployment.replicas
@@ -365,7 +446,11 @@ class ScenarioHarness:
                           arrivals=self.arrivals(epoch),
                           warm=sc.policy.warm, store=store,
                           sla_for=self.sla_for(offset),
-                          class_for=self.class_for(offset))
+                          class_for=self.class_for(offset),
+                          feature_for=self.input_features(offset, n_epoch),
+                          premodel=premodel,
+                          service_scale_for=self.service_scales(
+                              offset, n_epoch))
             stats = eng.router.stats()
             out.epochs.append(EpochResult(epoch=epoch, n_replicas=n_replicas,
                                           result=res, router_stats=stats))

@@ -26,8 +26,9 @@ from __future__ import annotations
 from typing import Dict, List, Optional
 
 from repro.scenario.spec import (AutoscalerSpec, DeploymentSpec, DriftSpec,
-                                 FaultSpec, NetworkSpec, PolicySpec,
-                                 RetrySpec, Scenario, SlaClass, WorkloadSpec)
+                                 FaultSpec, InputClassSpec, NetworkSpec,
+                                 PolicySpec, RetrySpec, Scenario, SlaClass,
+                                 WorkloadSpec)
 
 _REGISTRY: Dict[str, Scenario] = {}
 
@@ -265,6 +266,84 @@ def fleet_scenario(*, n_cells: int = 4, rate_rps: float = 120.0,
         policy=PolicySpec(policy="modipick", kwargs={"t_threshold": 20.0},
                           queue_aware=True),
         seed=seed)
+
+
+# ----------------------------------------------------------------------
+# the premodel family (input-conditional profiles & tail-SLA budgets)
+# ----------------------------------------------------------------------
+
+def premodel_scenario(*, premodel: str = "centroid",
+                      easy_scale: float = 0.25, hard_scale: float = 3.0,
+                      easy_weight: float = 0.5, feature_noise: float = 0.2,
+                      n_requests: int = 4000, rate_rps: float = 12.0,
+                      t_sla_ms: float = 250.0, seed: int = 23,
+                      name: Optional[str] = None) -> Scenario:
+    """Heterogeneous-difficulty inputs under one SLA: half the requests
+    are easy (true service = ``easy_scale`` x the model's draw), half
+    hard (``hard_scale`` x), separable by a cheap 1-D feature.
+
+    The tight uplink (2·40 = 80 ms under a 250 ms SLA) leaves a 170 ms
+    budget.  Unconditional profiles see each model as the bimodal
+    mixture — the inflated spread pushes every accurate model out of
+    eligibility and the router converges to one mid-tier compromise for
+    *everyone*.  With ``premodel="centroid"`` (or the ``"oracle"``
+    ablation) the conditional store routes easy inputs to the most
+    accurate model while hard inputs keep the mid-tier pick — strictly
+    more accuracy at the same attainment.  ``premodel="none"`` is the
+    unconditional arm over the *identical* workload (same salted
+    class/feature/scale assignment, same arrival and service draws)."""
+    return Scenario(
+        name=name or f"premodel_{premodel}",
+        workload=WorkloadSpec(
+            arrival="poisson", rate_rps=rate_rps, n_requests=n_requests,
+            t_sla_ms=t_sla_ms,
+            input_classes=(
+                InputClassSpec("easy", weight=easy_weight,
+                               latency_scale=easy_scale,
+                               feature_center=(0.0,),
+                               feature_noise=feature_noise),
+                InputClassSpec("hard", weight=1.0 - easy_weight,
+                               latency_scale=hard_scale,
+                               feature_center=(1.0,),
+                               feature_noise=feature_noise))),
+        network=_DRIFT_NET,
+        deployment=DeploymentSpec(topology="per_model", replicas=2),
+        policy=PolicySpec(policy="modipick", kwargs={"t_threshold": 20.0},
+                          queue_aware=True, premodel=premodel),
+        seed=seed)
+
+
+def tail_sla_scenario(*, quantile: Optional[float] = 0.95,
+                      spike_prob: float = 0.2, spike_mult: float = 3.5,
+                      n_requests: int = 3000, rate_rps: float = 15.0,
+                      t_sla_ms: float = 250.0, seed: int = 29,
+                      name: Optional[str] = None) -> Scenario:
+    """Co-tenant latency spikes vs the budget the router believes.
+
+    A fifth of inferences run 3.5x slow — far more probability mass
+    than a p95 budget tolerates.  The mean arm (``quantile=None``)
+    keeps spiky mid-heavy models eligible (their EWMA mean + σ still
+    fits the 170 ms budget) and eats a tail of certain SLA misses; the
+    quantile arm presents each model's streaming p95, which lands in
+    the spike region and excludes exactly the models whose spikes
+    cannot fit — buying back the tail attainment."""
+    return Scenario(
+        name=name or ("tail_sla" if quantile is not None
+                      else "tail_sla_mean"),
+        workload=WorkloadSpec(arrival="poisson", rate_rps=rate_rps,
+                              n_requests=n_requests, t_sla_ms=t_sla_ms),
+        network=_DRIFT_NET,
+        deployment=DeploymentSpec(topology="per_model", replicas=2,
+                                  spike_prob=spike_prob,
+                                  spike_mult=spike_mult),
+        policy=PolicySpec(policy="modipick", kwargs={"t_threshold": 20.0},
+                          queue_aware=True, latency_quantile=quantile),
+        seed=seed)
+
+
+register(premodel_scenario(name="premodel_mix"))
+register(tail_sla_scenario(name="tail_sla"))
+register(tail_sla_scenario(quantile=None, name="tail_sla_mean"))
 
 
 # Balanced 4-cell fleet at the steady per-cell operating point (each

@@ -44,6 +44,7 @@ ADMISSION_MODES = ("none", "admit_all", "depth_cap", "sla_aware",
 FAULT_KINDS = ("kill", "degrade", "drain", "recover")
 DRIFT_KINDS = ("latency", "network")
 PROFILE_MODES = ("ewma", "window", "frozen")
+PREMODEL_MODES = ("none", "centroid", "oracle")
 
 
 def _require(cond: bool, msg: str) -> None:
@@ -69,6 +70,35 @@ class SlaClass:
 
 
 @dataclass(frozen=True)
+class InputClassSpec:
+    """One input class in a heterogeneous-difficulty workload: requests
+    of this class arrive in proportion to ``weight``, their true
+    service time is the model's draw times ``latency_scale`` (easy
+    inputs < 1, hard inputs > 1), and each carries a cheap feature
+    vector drawn at ``feature_center`` ± ``feature_noise`` — what the
+    premodel classifier sees."""
+    name: str
+    weight: float = 1.0
+    latency_scale: float = 1.0
+    feature_center: Tuple[float, ...] = ()
+    feature_noise: float = 0.25
+
+    def __post_init__(self):
+        _require(bool(self.name), "InputClassSpec needs a non-empty name")
+        _require(self.weight > 0.0,
+                 f"input class {self.name!r}: weight must be positive")
+        _require(self.latency_scale > 0.0,
+                 f"input class {self.name!r}: latency_scale must be "
+                 "positive")
+        _require(len(self.feature_center) > 0,
+                 f"input class {self.name!r}: feature_center must be "
+                 "non-empty")
+        _require(self.feature_noise >= 0.0,
+                 f"input class {self.name!r}: feature_noise must be "
+                 "non-negative")
+
+
+@dataclass(frozen=True)
 class WorkloadSpec:
     """What arrives, how fast, and under which SLAs."""
     arrival: str = "poisson"
@@ -85,6 +115,10 @@ class WorkloadSpec:
     burst_every_ms: float = 10_000.0
     burst_len_ms: float = 1_000.0
     classes: Tuple[SlaClass, ...] = ()  # per-class SLA mix ((): single SLA)
+    # Per-input-class difficulty mix ((): homogeneous inputs — the
+    # historical workload).  Drives true service-time scaling and the
+    # feature vectors the premodel classifies on.
+    input_classes: Tuple[InputClassSpec, ...] = ()
 
     def __post_init__(self):
         _require(self.arrival in ARRIVAL_KINDS,
@@ -125,6 +159,14 @@ class WorkloadSpec:
         names = [c.name for c in self.classes]
         _require(len(names) == len(set(names)),
                  f"duplicate SLA class names: {names}")
+        if self.input_classes:
+            inames = [c.name for c in self.input_classes]
+            _require(len(inames) == len(set(inames)),
+                     f"duplicate input class names: {inames}")
+            dims = {len(c.feature_center) for c in self.input_classes}
+            _require(len(dims) == 1,
+                     "every input class must use the same feature "
+                     f"dimensionality, got {sorted(dims)}")
 
 
 @dataclass(frozen=True)
@@ -306,6 +348,17 @@ class PolicySpec:
     window: int = 64
     stale_after: int = 400
     explore_bonus: float = 0.9
+    # Tail-aware budgets: present each model's latency as this quantile
+    # of its observed distribution instead of the EWMA mean (None = the
+    # paper's mean-based presentation).  Eligibility, utilities and
+    # SLA-aware admission all judge against the presented value, so a
+    # 0.95 here makes the whole pipeline rank models by their p95.
+    latency_quantile: Optional[float] = None
+    # Premodel input classifier ("repro.premodel"): "none" (historical),
+    # "centroid" (online nearest-centroid learned from the feature
+    # stream), "oracle" (frozen true-center ablation).  Anything but
+    # "none" needs workload.input_classes.
+    premodel: str = "none"
 
     def __post_init__(self):
         from repro.core.policy import POLICIES, make_policy
@@ -324,6 +377,17 @@ class PolicySpec:
         _require(self.stale_after >= 1, "stale_after must be >= 1")
         _require(0.0 <= self.explore_bonus < 1.0,
                  "explore_bonus must be in [0, 1)")
+        if self.latency_quantile is not None:
+            _require(0.5 <= self.latency_quantile < 1.0,
+                     "latency_quantile must be in [0.5, 1), "
+                     f"got {self.latency_quantile}")
+        _require(self.premodel in PREMODEL_MODES,
+                 f"premodel must be one of {PREMODEL_MODES}, "
+                 f"got {self.premodel!r}")
+        if self.premodel != "none" or self.latency_quantile is not None:
+            _require(self.profile == "ewma",
+                     "premodel / latency_quantile stores extend the EWMA "
+                     f"profile family (profile={self.profile!r})")
         if not self.kwargs:
             object.__setattr__(
                 self, "kwargs",
@@ -360,6 +424,10 @@ class Scenario:
             _require(self.workload.epochs == 1,
                      "fault/drift injection needs workload.epochs == 1 "
                      "(fault times reference the single-run timeline)")
+        if self.policy.premodel != "none":
+            _require(bool(self.workload.input_classes),
+                     "a premodel classifier needs workload.input_classes "
+                     "(it has nothing to classify otherwise)")
         fl = self.deployment.fleet
         if fl is not None and fl.n_cells > 1:
             # The fleet engine owns the clock (FleetSpec.epoch_ms) and
@@ -379,6 +447,10 @@ class Scenario:
                      "fleet + fault/drift injection is not supported")
             _require(not self.workload.classes,
                      "fleet + per-class SLA mixes is not supported yet")
+            _require(not self.workload.input_classes,
+                     "fleet + input-class mixes is not supported yet")
+            _require(self.policy.latency_quantile is None,
+                     "fleet + quantile budgets is not supported yet")
 
     # -- serialization -------------------------------------------------
     def to_dict(self) -> Dict[str, Any]:
@@ -390,9 +462,19 @@ class Scenario:
         """Inverse of :meth:`to_dict`:
         ``Scenario.from_dict(s.to_dict()) == s``."""
         d = dict(d)
+        unknown = set(d) - {"name", "workload", "network", "deployment",
+                            "policy", "seed"}
+        _require(not unknown,
+                 f"unknown scenario keys: {sorted(unknown)} (a typo'd "
+                 "section would otherwise be silently dropped)")
         wl = dict(d.get("workload", {}))
         if "classes" in wl:
             wl["classes"] = tuple(SlaClass(**c) for c in wl["classes"])
+        if "input_classes" in wl:
+            wl["input_classes"] = tuple(
+                InputClassSpec(**{**c, "feature_center":
+                                  tuple(c.get("feature_center", ()))})
+                for c in wl["input_classes"])
         _tupled(wl, "rate_schedule", "times_ms")
         dep = dict(d.get("deployment", {}))
         if dep.get("autoscaler") is not None:

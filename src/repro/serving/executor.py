@@ -170,6 +170,7 @@ class PoolExecutor:
             "mean_quality": float(np.mean([r.quality for r in served]))
             if served else 0.0,
             "mean_latency_ms": float(np.mean(e2e)) if served else 0.0,
+            "p95_latency_ms": float(np.percentile(e2e, 95)) if served else 0.0,
             "p99_latency_ms": float(np.percentile(e2e, 99)) if served else 0.0,
             "hedged": sum(r.hedged for r in rs),
             "shed": len(rs) - len(served),

@@ -109,7 +109,7 @@ class _Columns:
 
     __slots__ = ("arrival", "t_input", "t_sla", "enqueue", "sstart",
                  "service", "finish", "depart", "model", "replica",
-                 "cls", "fallback", "rejected", "reason", "retries")
+                 "cls", "icls", "fallback", "rejected", "reason", "retries")
 
     def __init__(self, n: int):
         z = lambda dt: np.zeros(n, dtype=dt)
@@ -124,6 +124,7 @@ class _Columns:
         self.model = np.full(n, -1, dtype=np.int32)     # model id, -1 = none
         self.replica = np.full(n, -1, dtype=np.int32)   # pool index
         self.cls = z(np.int32)                          # class-label code
+        self.icls = np.full(n, -1, dtype=np.int32)      # premodel input class
         self.fallback = z(bool)
         self.rejected = z(bool)
         self.reason = z(np.int16)                       # reject-reason code
@@ -157,6 +158,11 @@ class LoadSimResult:
     # deadline-overrun hedges that found a viable fallback) — 0 for
     # fault-free runs.
     n_retries: int = 0
+    # Tail percentiles between the median and the p99 (the tail-SLA
+    # study's operating point); defaulted so positional constructions
+    # and serialized results predating them keep working.
+    p95_latency: float = 0.0
+    p95_queue_wait: float = 0.0
 
     @property
     def violation_rate(self) -> float:
@@ -242,7 +248,10 @@ class ServingSimulator:
             store: Optional[ProfileStore] = None,
             sla_for: Optional[Callable[[int], float]] = None,
             class_for: Optional[Callable[[int], str]] = None,
-            extra_input_for=None
+            extra_input_for=None,
+            feature_for=None,
+            premodel=None,
+            service_scale_for=None
             ) -> LoadSimResult:
         """Simulate ``n_requests``.  ``sla_for(rid)`` (optional) assigns
         per-request SLAs; ``t_sla`` remains the reporting label and the
@@ -264,7 +273,21 @@ class ServingSimulator:
         SLA scoring — judges the spilled request honestly).  Applied
         after the network draw, so the RNG stream is untouched and
         ``None`` (or all-zero) runs are bit-identical to the
-        historical engine."""
+        historical engine.
+
+        The premodel hooks (all optional, all RNG-neutral):
+        ``feature_for`` (an ``(n, d)`` array or an ``rid -> features``
+        callable) attaches cheap request features, materialized into a
+        column before the loop; ``premodel`` (an object with
+        ``classify``/``update``) maps them to input-class ids at
+        ENQUEUE, flips the store's class cursor for the selection, and
+        attributes the FINISH latency observation to the request's
+        class (the ``store`` must then be a
+        ``premodel.conditional.ConditionalProfileStore``);
+        ``service_scale_for`` (an ``(n,)`` array or callable) multiplies
+        the *sampled* inference time by a per-request constant — the
+        ground-truth easy/hard input effect, applied after the draw so
+        ``None`` (or all-ones) runs are bit-identical."""
         arrivals = arrivals or ClosedLoopArrivals()
         rng = np.random.default_rng(self.seed)
         store = store or make_store(self.entries, alpha=self.alpha,
@@ -312,6 +335,35 @@ class ServingSimulator:
             if extra_in.shape != (n,):
                 raise ValueError(f"extra_input_for array has shape "
                                  f"{extra_in.shape}, expected ({n},)")
+        # Premodel columns (RNG-free, rid order, like sla_for/class_for).
+        if feature_for is None:
+            feats = None
+        elif callable(feature_for):
+            feats = np.asarray([feature_for(i) for i in range(n)],
+                               dtype=np.float64)
+        else:
+            feats = np.asarray(feature_for, dtype=np.float64)
+            if len(feats) != n:
+                raise ValueError(f"feature_for array has {len(feats)} "
+                                 f"rows, expected {n}")
+        if premodel is not None:
+            if feats is None:
+                raise ValueError("premodel needs feature_for")
+            if not hasattr(store, "observe_class"):
+                raise ValueError("premodel routing needs a "
+                                 "ConditionalProfileStore (got "
+                                 f"{type(store).__name__})")
+        if service_scale_for is None:
+            svc_scale = None
+        elif callable(service_scale_for):
+            svc_scale = np.fromiter(
+                (float(service_scale_for(i)) for i in range(n)),
+                np.float64, count=n)
+        else:
+            svc_scale = np.asarray(service_scale_for, dtype=np.float64)
+            if svc_scale.shape != (n,):
+                raise ValueError(f"service_scale_for array has shape "
+                                 f"{svc_scale.shape}, expected ({n},)")
 
         # Replica binding: int queues + live per-model μ for the O(1)
         # wait estimates (the index-based free-list replacing the
@@ -354,6 +406,7 @@ class ServingSimulator:
         enq_c, sstart_c, service_c = cols.enqueue, cols.sstart, cols.service
         finish_c, depart_c = cols.finish, cols.depart
         model_c, replica_c, cls_c = cols.model, cols.replica, cols.cls
+        icls_c = cols.icls
         fallback_c, rejected_c, reason_c = cols.fallback, cols.rejected, \
             cols.reason
         closed_loop = arrivals.closed_loop
@@ -390,6 +443,11 @@ class ServingSimulator:
                 sstart_c[rid] = t0
                 store.observe_queue(names[mid], t0 - t_enq)
                 t_inf = svc.sample(rng, names[mid], replica.speed)
+                if svc_scale is not None:
+                    # The TRUE input class's latency effect (easy inputs
+                    # run fast, hard ones slow) — a post-draw multiply,
+                    # so the RNG stream matches scale-free runs.
+                    t_inf *= svc_scale[rid]
                 service_c[rid] = t_inf
                 replica.current = rid
                 replica.busy_until = t0 + t_inf
@@ -515,17 +573,32 @@ class ServingSimulator:
                         state = self.pool.charged_state(now)
                     else:
                         w_map = self.pool.waits_by_name(now, store)
+                if premodel is not None:
+                    # Classify at ENQUEUE — the premodel sees the
+                    # feature vector the device sent, before selection.
+                    # The stored id is the *belief at routing time*
+                    # (classify before update), so the FINISH
+                    # observation lands on the class that was routed on.
+                    for r in batch:
+                        icls_c[r] = premodel.classify(feats[r])
+                        premodel.update(feats[r])
                 if len(batch) == 1:
                     # Scalar fast path: tuple out, no BatchDecisions
                     # column set allocated per request (continuous
                     # arrivals make every batch a singleton, ~1M/run).
-                    mid, fb, _w, reason = router.route_one(
-                        t_sla_c[rid], t_input_c[rid], rng,
-                        w_queue_map=w_map,
-                        sla_class=(None if router._admits_all else
-                                   class_names[cls_c[rid]]),
-                        depth_fn=lambda m: min(r.depth() for r in
-                                               self.pool.candidates(m)))
+                    if premodel is not None:
+                        store.set_class(int(icls_c[rid]))
+                    try:
+                        mid, fb, _w, reason = router.route_one(
+                            t_sla_c[rid], t_input_c[rid], rng,
+                            w_queue_map=w_map,
+                            sla_class=(None if router._admits_all else
+                                       class_names[cls_c[rid]]),
+                            depth_fn=lambda m: min(r.depth() for r in
+                                                   self.pool.candidates(m)))
+                    finally:
+                        if premodel is not None:
+                            store.set_class(-1)
                     if mid < 0:
                         reject(rid, reason, enq_c[rid], now)
                         continue
@@ -549,14 +622,27 @@ class ServingSimulator:
                     continue
                 # Array-in/array-out routing: budget/class columns in,
                 # decision columns out — no per-request objects.
-                res = router.route_batch_arrays(
-                    t_sla_c[batch], t_input_c[batch], rng,
-                    sla_class=(None if router._admits_all else
-                               [class_names[cls_c[r]] for r in batch]),
-                    charged=state, w_queue_map=w_map,
-                    depth_fn=lambda m: min(r.depth() for r in
-                                           self.pool.candidates(m)),
-                    charge=self.charge_batches)
+                if premodel is not None:
+                    # Class-conditional batch: per-request class rows
+                    # gathered from the stacked (K × pool) snapshot in
+                    # one device call (snapshot wait semantics — the
+                    # classed path has no charging ledger).
+                    res = router.route_batch_classed(
+                        t_sla_c[batch], t_input_c[batch], icls_c[batch],
+                        rng,
+                        w_queue_map=(state.as_map() if state is not None
+                                     else w_map),
+                        depth_fn=lambda m: min(r.depth() for r in
+                                               self.pool.candidates(m)))
+                else:
+                    res = router.route_batch_arrays(
+                        t_sla_c[batch], t_input_c[batch], rng,
+                        sla_class=(None if router._admits_all else
+                                   [class_names[cls_c[r]] for r in batch]),
+                        charged=state, w_queue_map=w_map,
+                        depth_fn=lambda m: min(r.depth() for r in
+                                               self.pool.candidates(m)),
+                        charge=self.charge_batches)
                 pool_replicas = self.pool.replicas
                 for j, rid in enumerate(batch):
                     if not res.admitted[j]:
@@ -610,7 +696,12 @@ class ServingSimulator:
                 t_inf = float(service_c[rid])
                 replica.busy_ms += t_inf
                 mid = model_c[rid]
-                store.observe(names[mid], t_inf)
+                if premodel is not None and icls_c[rid] >= 0:
+                    # Class-attributed telemetry: feeds the request's
+                    # believed class AND the pooled estimate.
+                    store.observe_class(int(icls_c[rid]), names[mid], t_inf)
+                else:
+                    store.observe(names[mid], t_inf)
                 mu_now[mid] = profiles[mid].mu
                 # Cold-model refresh (§3.3): probe one stale model
                 # out-of-band, as in the original closed loop.
@@ -859,8 +950,10 @@ class ServingSimulator:
             mean_latency=float(e2e.mean()),
             p50_latency=float(np.percentile(e2e, 50)),
             p99_latency=float(np.percentile(e2e, 99)),
+            p95_latency=float(np.percentile(e2e, 95)),
             mean_queue_wait=float(wait.mean()),
             p99_queue_wait=float(np.percentile(wait, 99)),
+            p95_queue_wait=float(np.percentile(wait, 95)),
             peak_queue_depth=max(r.peak_depth for r in self.pool.replicas),
             model_usage={k: v / len(completed)
                          for k, v in sorted(usage.items())},

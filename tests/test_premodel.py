@@ -1,0 +1,353 @@
+"""Premodel subsystem: streaming quantiles, the input classifier,
+conditional profiles with shrinkage, the classed fused kernel, and the
+engine/scenario wiring — including the RNG-neutrality guarantee that
+premodel-off runs are bit-identical with the new columns materialized.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core.netmodel import NetworkModel
+from repro.core.policy import ModiPick
+from repro.core.profiles import ModelProfile
+from repro.core.zoo import TABLE2, make_store
+from repro.kernels import policy_select
+from repro.premodel import (ConditionalProfileStore, NearestCentroidClassifier,
+                            OracleClassifier, P2Quantile,
+                            QuantileProfileStore, make_classifier)
+from repro.premodel.quantile import z_score
+from repro.scenario import PolicySpec, Scenario, WorkloadSpec
+from repro.scenario.spec import InputClassSpec
+from repro.sim import PoissonArrivals, ServingSimulator, per_model_replicas
+
+NET = NetworkModel(50.0, 25.0)
+
+
+def _profiles():
+    return [ModelProfile(name=e.name, accuracy=e.top1 / 100.0)
+            for e in TABLE2]
+
+
+def _warm(store):
+    for e in TABLE2:
+        p = store[e.name]
+        p.mu = e.mu_ms
+        p.var = e.sigma_ms ** 2
+        p.n_obs = 1000
+    store.invalidate()
+    return store
+
+
+# ----------------------------------------------------------------------
+# P² streaming quantiles
+# ----------------------------------------------------------------------
+
+def test_p2_quantile_tracks_numpy_percentile():
+    rng = np.random.default_rng(0)
+    for q, data in [(0.95, rng.normal(100.0, 20.0, 4000)),
+                    (0.99, rng.normal(100.0, 20.0, 4000)),
+                    (0.95, rng.exponential(50.0, 4000))]:
+        t = P2Quantile(q)
+        for v in data:
+            t.observe(float(v))
+        ref = float(np.percentile(data, 100.0 * q))
+        assert abs(t.value() - ref) / ref < 0.05, (q, t.value(), ref)
+
+
+def test_p2_quantile_small_n_is_exact_nearest_rank():
+    t = P2Quantile(0.5)
+    assert t.value() is None
+    for v in (5.0, 1.0, 3.0):
+        t.observe(v)
+    assert t.value() == 3.0
+
+
+def test_z_score_matches_normal_inverse_cdf():
+    assert z_score(0.5) == pytest.approx(0.0)
+    assert z_score(0.95) == pytest.approx(1.6448536, abs=1e-5)
+
+
+# ----------------------------------------------------------------------
+# quantile-presenting store
+# ----------------------------------------------------------------------
+
+def test_quantile_store_presents_gaussian_fallback_then_tracker():
+    store = _warm(QuantileProfileStore(_profiles(), q=0.95, min_obs=8))
+    t = store.table()
+    i = t.index["InceptionV3"]
+    e = next(x for x in TABLE2 if x.name == "InceptionV3")
+    # Cold trackers: the seeded Gaussian mu + z_q * sigma, with sigma
+    # presented as 0 (the quantile already carries the pessimism).
+    assert t.mu[i] == pytest.approx(e.mu_ms + z_score(0.95) * e.sigma_ms)
+    assert t.sigma[i] == 0.0
+    # 20% spikes at 4x: the streaming p95 lands in the spike region,
+    # far above the EWMA mean the raw profile keeps for load charging.
+    rng = np.random.default_rng(1)
+    for k in range(400):
+        lat = e.mu_ms * (4.0 if rng.random() < 0.2 else 1.0)
+        store.observe("InceptionV3", lat)
+    t = store.table()
+    assert t.mu[i] == pytest.approx(4.0 * e.mu_ms, rel=0.1)
+    assert store["InceptionV3"].mu < 2.0 * e.mu_ms   # raw EWMA stays mean
+
+
+# ----------------------------------------------------------------------
+# the premodel classifiers
+# ----------------------------------------------------------------------
+
+def test_centroid_classifier_recovers_planted_clusters():
+    rng = np.random.default_rng(2)
+    centers = np.array([[0.0, 0.0], [3.0, 3.0]])
+    clf = NearestCentroidClassifier(2, 2)
+    for k in range(400):
+        true = k % 2
+        x = centers[true] + 0.3 * rng.standard_normal(2)
+        clf.update(x)
+    # Alternating feed seeds centroid k from cluster k, so labels align.
+    hits = 0
+    for k in range(200):
+        true = k % 2
+        x = centers[true] + 0.3 * rng.standard_normal(2)
+        hits += clf.classify(x) == true
+    assert hits >= 190
+
+
+def test_oracle_classifier_is_frozen_nearest_center():
+    clf = OracleClassifier([(0.0,), (1.0,)])
+    assert clf.classify((0.1,)) == 0
+    assert clf.classify((0.9,)) == 1
+    before = clf.classify((0.4,))
+    for _ in range(50):
+        clf.update((0.9,))
+    assert clf.classify((0.4,)) == before
+
+
+def test_make_classifier_dispatch():
+    assert make_classifier("none", 2, 1) is None
+    assert isinstance(make_classifier("centroid", 2, 1),
+                      NearestCentroidClassifier)
+    assert isinstance(make_classifier("oracle", 2, 1,
+                                      centers=((0.0,), (1.0,))),
+                      OracleClassifier)
+    with pytest.raises(ValueError):
+        make_classifier("bogus", 2, 1)
+
+
+# ----------------------------------------------------------------------
+# conditional profiles + shrinkage
+# ----------------------------------------------------------------------
+
+def test_cold_class_is_exactly_the_pooled_view():
+    store = _warm(ConditionalProfileStore(_profiles(), n_classes=3))
+    pooled = store.table()
+    for cls in range(3):
+        ct = store.class_table(cls)
+        np.testing.assert_array_equal(ct.mu, pooled.mu)
+        np.testing.assert_array_equal(ct.sigma, pooled.sigma)
+
+
+def test_shrinkage_converges_to_class_truth():
+    store = _warm(ConditionalProfileStore(_profiles(), n_classes=2,
+                                          tau=16.0))
+    e = next(x for x in TABLE2 if x.name == "InceptionV3")
+    for _ in range(400):
+        store.observe_class(0, "InceptionV3", 3.0 * e.mu_ms)
+    mu0, _ = store.shrunk(0, "InceptionV3")
+    mu1, _ = store.shrunk(1, "InceptionV3")
+    assert mu0 == pytest.approx(3.0 * e.mu_ms, rel=0.05)
+    # The untouched class tracks the pooled estimate (which the class-0
+    # observations also fed — pooled telemetry never stops).
+    assert mu1 == pytest.approx(store["InceptionV3"].mu, rel=1e-9)
+
+
+def test_set_class_flips_table_and_pooled_table_restores_cursor():
+    store = _warm(ConditionalProfileStore(_profiles(), n_classes=2))
+    e = next(x for x in TABLE2 if x.name == "InceptionV3")
+    for _ in range(200):
+        store.observe_class(1, "InceptionV3", 2.0 * e.mu_ms)
+    store.set_class(1)
+    i = store.table().index["InceptionV3"]
+    assert store.table().mu[i] > 1.5 * e.mu_ms
+    assert store.pooled_table().mu[i] < store.table().mu[i]
+    assert store.active == 1                 # cursor survives the helper
+    store.set_class(-1)
+    with pytest.raises(ValueError):
+        store.set_class(2)
+    with pytest.raises(ValueError):
+        store.set_class(-2)
+
+
+def test_stacked_pool_caches_against_version():
+    store = _warm(ConditionalProfileStore(_profiles(), n_classes=2))
+    s1 = store.stacked_pool()
+    assert store.stacked_pool() is s1        # no telemetry -> cached
+    store.observe_class(0, "InceptionV3", 40.0)
+    s2 = store.stacked_pool()
+    assert s2 is not s1
+    assert s2.k == 2 and s2.n == len(TABLE2)
+
+
+# ----------------------------------------------------------------------
+# the classed fused kernel
+# ----------------------------------------------------------------------
+
+def test_select_classed_matches_select_fused_on_identical_classes():
+    """K identical class views + any class ids == the unconditional
+    fused kernel (same seed, same draws)."""
+    store = _warm(ConditionalProfileStore(_profiles(), n_classes=3))
+    table = store.pooled_table()
+    stacked = store.stacked_pool()
+    rng = np.random.default_rng(3)
+    B = 64
+    t_u = rng.uniform(60.0, 400.0, B)
+    t_l = t_u - 20.0
+    cls = rng.integers(0, 3, B).astype(np.int32)
+    idx_c, has_c = policy_select.select_classed(stacked, cls, t_u, t_l,
+                                                seed=11)
+    idx_f, has_f = policy_select.select_fused(table.device_pool(), t_u, t_l,
+                                              seed=11)
+    np.testing.assert_array_equal(has_c, has_f)
+    np.testing.assert_array_equal(idx_c[has_c], idx_f[has_f])
+
+
+def test_select_classed_routes_each_row_through_its_class_view():
+    """Warm both classes with inverted latency truths: for class 0 only
+    NasNet-Large is eligible, for class 1 everything but.  Eligibility
+    then forces every row's pick through its own class view."""
+    store = _warm(ConditionalProfileStore(_profiles(), n_classes=2,
+                                          tau=1.0))
+    for e in TABLE2:
+        fast0 = e.name == "NasNet-Large"
+        for _ in range(300):
+            store.observe_class(0, e.name, 10.0 if fast0 else 500.0)
+            store.observe_class(1, e.name, 500.0 if fast0 else 30.0)
+    nl = store.table().index["NasNet-Large"]
+    stacked = store.stacked_pool()
+    B = 32
+    t_u = np.full(B, 100.0)
+    cls = (np.arange(B) % 2).astype(np.int32)
+    idx, has = policy_select.select_classed(stacked, cls, t_u, t_u - 20.0,
+                                            seed=5)
+    assert has.all()
+    assert (idx[cls == 0] == nl).all()
+    assert (idx[cls == 1] != nl).all()
+
+
+# ----------------------------------------------------------------------
+# engine wiring
+# ----------------------------------------------------------------------
+
+def _sim(seed=3):
+    return ServingSimulator(TABLE2, NET, per_model_replicas(TABLE2),
+                            seed=seed, queue_aware=True)
+
+
+def test_premodel_off_with_features_is_bit_identical():
+    """Materializing features and all-ones service scales must not
+    perturb a premodel-off run by a single bit."""
+    base = _sim().run(ModiPick(t_threshold=20.0), 250.0, 400,
+                      arrivals=PoissonArrivals(30.0))
+    wired = _sim().run(ModiPick(t_threshold=20.0), 250.0, 400,
+                       arrivals=PoissonArrivals(30.0),
+                       feature_for=lambda i: (float(i % 2),),
+                       service_scale_for=lambda i: 1.0)
+    assert base == wired
+
+
+def test_premodel_run_feeds_class_telemetry_and_orders_percentiles():
+    store = _warm(ConditionalProfileStore(_profiles(), n_classes=2))
+    centers = [(0.0,), (1.0,)]
+    res = _sim().run(ModiPick(t_threshold=20.0), 250.0, 500,
+                     arrivals=PoissonArrivals(30.0), store=store,
+                     feature_for=lambda i: centers[i % 2],
+                     premodel=OracleClassifier(centers),
+                     service_scale_for=lambda i: 0.5 if i % 2 == 0 else 1.5)
+    assert res.n_completed > 0
+    assert store.class_obs(0) > 0 and store.class_obs(1) > 0
+    assert store.active == -1          # cursor always restored
+    assert res.p50_latency <= res.p95_latency <= res.p99_latency
+    assert res.p95_queue_wait <= res.p99_queue_wait
+
+
+def test_premodel_batched_and_singleton_paths_agree_roughly():
+    """Lookahead batching rides route_batch_classed; the headline
+    numbers must stay in the same regime as the singleton path."""
+    def run(window):
+        sim = ServingSimulator(TABLE2, NET, per_model_replicas(TABLE2),
+                               seed=3, queue_aware=True,
+                               batch_window_ms=window)
+        store = _warm(ConditionalProfileStore(_profiles(), n_classes=2))
+        centers = [(0.0,), (1.0,)]
+        return sim.run(ModiPick(t_threshold=20.0), 250.0, 600,
+                       arrivals=PoissonArrivals(40.0), store=store,
+                       feature_for=lambda i: centers[i % 2],
+                       premodel=OracleClassifier(centers),
+                       service_scale_for=lambda i:
+                           0.5 if i % 2 == 0 else 1.5)
+    single, batched = run(0.0), run(5.0)
+    assert batched.n_completed > 0
+    assert abs(single.sla_attainment - batched.sla_attainment) < 0.1
+    assert abs(single.mean_accuracy - batched.mean_accuracy) < 0.05
+
+
+def test_engine_validates_premodel_prerequisites():
+    sim = _sim()
+    with pytest.raises(ValueError, match="feature_for"):
+        sim.run(ModiPick(t_threshold=20.0), 250.0, 10,
+                arrivals=PoissonArrivals(30.0),
+                premodel=OracleClassifier([(0.0,), (1.0,)]))
+    with pytest.raises(ValueError, match="ConditionalProfileStore"):
+        sim.run(ModiPick(t_threshold=20.0), 250.0, 10,
+                arrivals=PoissonArrivals(30.0),
+                store=make_store(TABLE2),
+                feature_for=lambda i: (0.0,),
+                premodel=OracleClassifier([(0.0,), (1.0,)]))
+
+
+# ----------------------------------------------------------------------
+# scenario layer
+# ----------------------------------------------------------------------
+
+def test_premodel_scenario_end_to_end_smoke():
+    from repro.scenario.registry import premodel_scenario
+    sc = premodel_scenario(n_requests=300, name="premodel_smoke")
+    r = sc.build().run()
+    assert r.result.n_completed > 0
+    assert r.sla_attainment > 0.8
+
+
+def test_tail_scenario_end_to_end_smoke():
+    from repro.scenario.registry import tail_sla_scenario
+    sc = tail_sla_scenario(n_requests=300, name="tail_smoke")
+    r = sc.build().run()
+    assert r.result.n_completed > 0
+    assert r.sla_attainment > 0.8
+
+
+def test_spec_validates_premodel_fields():
+    with pytest.raises(ValueError, match="latency_quantile"):
+        PolicySpec(latency_quantile=1.5)
+    with pytest.raises(ValueError, match="premodel"):
+        PolicySpec(premodel="bogus")
+    with pytest.raises(ValueError, match="feature_center"):
+        InputClassSpec("easy")
+    with pytest.raises(ValueError, match="input_classes"):
+        Scenario(name="x", policy=PolicySpec(premodel="centroid"))
+    with pytest.raises(ValueError, match="feature dim"):
+        WorkloadSpec(input_classes=(
+            InputClassSpec("a", feature_center=(0.0,)),
+            InputClassSpec("b", feature_center=(1.0, 1.0))))
+
+
+def test_quantile_scenario_store_is_quantile_presenting():
+    from repro.scenario.registry import tail_sla_scenario
+    h = tail_sla_scenario(name="tq_store").build()
+    store = h.store()
+    assert isinstance(store, QuantileProfileStore)
+    e = next(x for x in TABLE2 if x.name == "InceptionV3")
+    i = store.table().index["InceptionV3"]
+    assert store.table().mu[i] == pytest.approx(
+        e.mu_ms + z_score(0.95) * e.sigma_ms)
+    h_mean = tail_sla_scenario(quantile=None, name="tq_mean").build()
+    assert not isinstance(h_mean.store(), QuantileProfileStore)

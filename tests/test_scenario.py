@@ -39,13 +39,54 @@ def test_round_trip_every_registered_scenario():
     registered scenario, through actual JSON text."""
     names = list_scenarios()
     assert {"steady", "diurnal", "burst", "class_mix", "scale_up",
-            "fleet_steady", "fleet_diurnal"} <= set(names)
+            "fleet_steady", "fleet_diurnal", "premodel_mix", "tail_sla",
+            "tail_sla_mean"} <= set(names)
     for name in names:
         s = get_scenario(name)
         d = s.to_dict()
         via_json = json.loads(json.dumps(d))    # plain data, JSON-clean
         assert Scenario.from_dict(via_json) == s
         assert Scenario.from_dict(d) == s
+
+
+def test_from_file_round_trip_and_error_paths(tmp_path):
+    s = get_scenario("premodel_mix")
+    jpath = tmp_path / "scenario.json"
+    jpath.write_text(json.dumps(s.to_dict()), encoding="utf-8")
+    assert Scenario.from_file(jpath) == s
+
+    tpath = tmp_path / "scenario.toml"
+    tpath.write_text(
+        'name = "tiny"\n'
+        "[workload]\n"
+        "n_requests = 10\n"
+        "[policy]\n"
+        "queue_aware = true\n", encoding="utf-8")
+    t = Scenario.from_file(tpath)
+    assert t.name == "tiny" and t.workload.n_requests == 10
+
+    bad_json = tmp_path / "bad.json"
+    bad_json.write_text("{not json", encoding="utf-8")
+    with pytest.raises(json.JSONDecodeError):
+        Scenario.from_file(bad_json)
+
+    try:
+        import tomllib
+    except ImportError:
+        import tomli as tomllib
+    bad_toml = tmp_path / "bad.toml"
+    bad_toml.write_text("name = ", encoding="utf-8")
+    with pytest.raises(tomllib.TOMLDecodeError):
+        Scenario.from_file(bad_toml)
+
+    typo = tmp_path / "typo.json"
+    typo.write_text(json.dumps({**s.to_dict(), "wrokload": {}}),
+                    encoding="utf-8")
+    with pytest.raises(ValueError, match="unknown scenario keys"):
+        Scenario.from_file(typo)
+
+    with pytest.raises(FileNotFoundError):
+        Scenario.from_file(tmp_path / "missing.json")
 
 
 def test_spec_validation_rejects_malformed_configs():
