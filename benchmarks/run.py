@@ -27,6 +27,7 @@ def main() -> None:
         args.fast = True
 
     from benchmarks import drift_resilience as dr
+    from benchmarks import elastic_controllers as ec
     from benchmarks import engine_throughput as et
     from benchmarks import fleet_throughput as ft
     from benchmarks import load_sweep as ls
@@ -73,6 +74,12 @@ def main() -> None:
         # resilience assertion (adaptive post-drift attainment >= 0.9
         # and >= 2x the frozen-profile ablation)
         "drift_resilience": lambda: dr.bench_rows(fast=args.fast),
+        # mid-run elastic controllers vs epoch-boundary autoscaling;
+        # carries the tier-1-visible gates (zero in-flight requests
+        # lost to drain-based scale-in, and the capped proportional
+        # controller beating the epoch baseline's pooled attainment at
+        # lower replica-seconds on the 10x load step)
+        "elastic_controllers": lambda: ec.bench_rows(fast=args.fast),
         # multi-cell scaling + spill frontier + batch-window ablation;
         # carries the tier-1-visible fleet guard (4-cell toy >= 0.9
         # attainment and >= 2.5x the 1-cell goodput under --smoke)

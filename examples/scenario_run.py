@@ -39,6 +39,13 @@ def headline(tag, out):
           f"acc={r.mean_accuracy:.3f} shed={shed / max(n, 1):.3f} "
           f"qwait={r.mean_queue_wait:6.1f}ms "
           f"replicas={out.replica_history[-1]}")
+    prov = sum(e.result.n_provisioned for e in out.epochs)
+    deco = sum(e.result.n_decommissioned for e in out.epochs)
+    if prov or deco:  # mid-run elastic lifecycle ran: show the cost axis
+        rep_s = sum(e.result.replica_seconds for e in out.epochs)
+        print(f"{'':>10}  provisioned={prov} decommissioned={deco} "
+              f"replica_seconds={rep_s:.1f} "
+              f"history={'/'.join(str(x) for x in out.replica_history)}")
 
 
 def main() -> None:

@@ -113,6 +113,9 @@ class Router:
         self.n_retries = 0
         self.n_retry_routed = 0
         self.n_retry_exhausted = 0
+        # window_stats() baseline: the lifetime counters at the last
+        # window boundary (empty == window starts at construction).
+        self._win_base: Dict[str, float] = {}
 
     # ------------------------------------------------------------------
     # object surface (adapters over the array core)
@@ -718,7 +721,24 @@ class Router:
         self.n_retries = 0
         self.n_retry_routed = 0
         self.n_retry_exhausted = 0
+        self._win_base = {}
         self.admission.reset()
+
+    def window_stats(self) -> Dict[str, float]:
+        """One control window's counter deltas: ``stats()`` since the
+        previous ``window_stats()`` call (or construction/``reset()``),
+        WITHOUT zeroing the lifetime counters — the mid-run elastic
+        controller reads per-tick rates while epoch-level consumers keep
+        seeing their lifetime totals.  ``mean_batch`` is recomputed from
+        the window's own deltas."""
+        cur = self.stats()
+        base = self._win_base
+        out = {k: cur[k] - base.get(k, 0.0) for k in cur
+               if k != "mean_batch"}
+        out["mean_batch"] = (out["n_routed"] / out["n_batches"]
+                             if out["n_batches"] else 0.0)
+        self._win_base = cur
+        return out
 
     def stats(self) -> Dict[str, float]:
         """Router-side counters: routed/admitted/shed/fallback/batches

@@ -4,8 +4,10 @@ The ROADMAP loop this closes: ``Router.stats()`` (shed rate, fallback
 rate, mean batch) plus the engine's queue-wait summary are exactly the
 control signal a replica autoscaler needs.  ``QueueTargetAutoscaler``
 consumes one epoch's *windowed* readings (the scenario harness builds a
-fresh router per epoch; long-running routers get the same window via
-``Router.reset()``) and answers the replica count for the next epoch:
+fresh engine — and with it a fresh router — per epoch; long-running
+routers get per-window deltas from ``Router.window_stats()`` without
+zeroing, or the same effect via ``Router.reset()`` at each boundary)
+and answers the replica count for the next epoch:
 
 - **scale up** (by ``step``, capped at ``max_replicas``) when the epoch
   missed its queue target — mean queue wait above ``target_queue_ms``,
@@ -17,6 +19,23 @@ fresh router per epoch; long-running routers get the same window via
   quarter of target, and mean replica utilization below
   ``low_utilization`` — hysteresis so the pool does not flap around the
   target.
+
+The utilization read prefers ``LoadSimResult.mean_live_utilization``
+(busy time over each replica's *alive* window).  Averaging the raw
+``replica_utilization`` dict over all replicas dilutes the signal
+*downward* when the epoch carried killed/decommissioned replicas — a
+dead replica contributes ≈0 busy fraction, dragging the mean under
+``low_utilization`` and promoting spurious scale-in while the survivors
+are saturated (verified in ``tests/test_elastic.py``; the ISSUE's
+"blocks legitimate scale-in" suspicion had the direction inverted).
+On static fault-free pools the two reads are bit-identical, so every
+epoch-boundary golden is preserved.
+
+This is the *degenerate* control path — one decision per epoch,
+instantaneous and free.  ``AutoscalerSpec.control_interval_ms > 0``
+instead arms the engine-side mid-run controllers
+(``sim.elastic``): cold-start-paying provisioning, drain-based
+scale-in, windowed per-tick telemetry.
 
 The policy is deliberately a deterministic function of one epoch's
 telemetry: scenario runs stay reproducible, and the SLA-vs-cost
@@ -54,8 +73,15 @@ class QueueTargetAutoscaler:
                       or fallback_rate > s.max_fallback_rate)
         if overloaded:
             return min(n_replicas + s.step, s.max_replicas)
-        util = result.replica_utilization
-        mean_util = float(np.mean(list(util.values()))) if util else 0.0
+        # Prefer the alive-window-normalized read: the all-replica mean
+        # is diluted toward 0 by dead (killed/decommissioned) replicas,
+        # which would trigger spurious scale-in while the survivors are
+        # saturated.  Falsy covers results predating the field (and the
+        # genuinely-idle pool, where the fallback computes ~0 anyway).
+        mean_util = getattr(result, "mean_live_utilization", None)
+        if not mean_util:
+            util = result.replica_utilization
+            mean_util = float(np.mean(list(util.values()))) if util else 0.0
         idle = (shed_rate == 0.0
                 and result.mean_queue_wait < 0.25 * s.target_queue_ms
                 and mean_util < s.low_utilization)

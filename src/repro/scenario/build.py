@@ -153,6 +153,27 @@ def build_arrival_times(scenario: Scenario) -> Optional[np.ndarray]:
 # entry-point adapters (the from_scenario implementations)
 # ----------------------------------------------------------------------
 
+def build_elastic(scenario: Scenario):
+    """Compile the deployment's ``AutoscalerSpec`` into the engine's
+    ``sim.elastic.ElasticConfig`` — None when there is no autoscaler or
+    its ``control_interval_ms`` is 0 (the epoch-boundary degenerate
+    path, which builds no engine-side controller at all and so keeps
+    those goldens bit-identical)."""
+    asc = scenario.deployment.autoscaler
+    if asc is None or asc.control_interval_ms == 0.0:
+        return None
+    from repro.sim.elastic import ElasticConfig
+    return ElasticConfig(
+        kind=asc.kind, control_interval_ms=asc.control_interval_ms,
+        cold_start_ms=asc.cold_start_ms,
+        target_queue_ms=asc.target_queue_ms,
+        max_shed_rate=asc.max_shed_rate,
+        max_fallback_rate=asc.max_fallback_rate,
+        min_replicas=asc.min_replicas, max_replicas=asc.max_replicas,
+        step=asc.step, low_utilization=asc.low_utilization,
+        cost_per_replica_s=asc.cost_per_replica_s)
+
+
 def build_engine(scenario: Scenario, *, n_replicas: Optional[int] = None,
                  seed: Optional[int] = None):
     """Scenario -> ``sim.engine.ServingSimulator`` (any workload)."""
@@ -167,7 +188,8 @@ def build_engine(scenario: Scenario, *, n_replicas: Optional[int] = None,
         spike_prob=dep.spike_prob, spike_mult=dep.spike_mult,
         queue_aware=pol.queue_aware, admission=build_admission(scenario),
         batch_window_ms=dep.batch_window_ms, backend=pol.backend,
-        faults=build_faults(scenario), retry=build_retry(scenario))
+        faults=build_faults(scenario), retry=build_retry(scenario),
+        elastic=build_elastic(scenario))
 
 
 def build_closed_loop(scenario: Scenario):
@@ -431,8 +453,14 @@ class ScenarioHarness:
         policy = build_policy(sc)
         store = self.store()
         premodel = self.premodel()
-        scaler = (QueueTargetAutoscaler(sc.deployment.autoscaler)
-                  if sc.deployment.autoscaler is not None else None)
+        asc = sc.deployment.autoscaler
+        # Epoch-boundary autoscaling only when there is no mid-run
+        # controller: with control_interval_ms > 0 the engine's own
+        # elastic tick owns the pool size, and the harness merely
+        # carries the committed count into the next epoch's engine.
+        mid_run = asc is not None and asc.control_interval_ms > 0.0
+        scaler = (QueueTargetAutoscaler(asc)
+                  if asc is not None and not mid_run else None)
         n_replicas = sc.deployment.replicas
         out = ScenarioResult(scenario=sc)
         offset = 0
@@ -456,6 +484,9 @@ class ScenarioHarness:
                                           result=res, router_stats=stats))
             if scaler is not None:
                 n_replicas = scaler.decide(n_replicas, stats, res)
+            elif mid_run:
+                n_replicas = min(max(eng.committed_replica_count(),
+                                     asc.min_replicas), asc.max_replicas)
             offset += n_epoch
         return out
 

@@ -19,7 +19,12 @@ and at full scale by ``benchmarks/scenario_suite.py``:
   class at the batch class's expense;
 - ``scale_up`` — a 10x load step under a queue-target autoscaler: SLA
   attainment collapses at the step and recovers as replicas are added,
-  with no manual pool edits.
+  with no manual pool edits;
+- ``elastic_step`` / ``elastic_proportional`` / ``elastic_cost_weighted``
+  — the same 10x step under *mid-run* controllers ticking on the event
+  queue (``sim.elastic``): cold-start-paying provisioning, drain-based
+  scale-in, and the SLA-vs-replica-seconds frontier swept by
+  ``benchmarks/elastic_controllers.py``.
 """
 from __future__ import annotations
 
@@ -134,6 +139,51 @@ register(Scenario(
     policy=PolicySpec(policy="modipick", kwargs={"t_threshold": 20.0},
                       queue_aware=True),
     seed=9))
+
+
+# ----------------------------------------------------------------------
+# the elastic family (mid-run controllers on the event queue)
+# ----------------------------------------------------------------------
+
+def elastic_scenario(*, kind: str = "proportional",
+                     control_interval_ms: float = 1_000.0,
+                     cold_start_ms: float = 500.0,
+                     target_queue_ms: float = 25.0,
+                     cost_per_replica_s: float = 0.0,
+                     n_requests: int = 2000, epochs: int = 5,
+                     seed: int = 9, name: Optional[str] = None) -> Scenario:
+    """The ``scale_up`` 10x load step under a MID-RUN elastic controller
+    (``sim.elastic``): identical workload shape, network, policy and
+    seed as the epoch-boundary ``scale_up`` registry entry, so the two
+    paths are an apples-to-apples comparison — same arrival draws, only
+    the control law differs.  The controller ticks every
+    ``control_interval_ms`` inside each epoch, scale-up pays
+    ``cold_start_ms`` per WARMING replica, and scale-in drains before
+    decommissioning (zero in-flight requests lost)."""
+    return Scenario(
+        name=name or f"elastic_{kind}",
+        workload=WorkloadSpec(
+            arrival="poisson", rate_rps=4.0,
+            rate_schedule=(4.0,) + (40.0,) * (epochs - 1),
+            epochs=epochs, n_requests=n_requests, t_sla_ms=250.0),
+        network=_NET,
+        deployment=DeploymentSpec(
+            topology="shared", replicas=1,
+            autoscaler=AutoscalerSpec(
+                target_queue_ms=target_queue_ms, max_shed_rate=0.02,
+                min_replicas=1, max_replicas=8, step=2,
+                kind=kind, control_interval_ms=control_interval_ms,
+                cold_start_ms=cold_start_ms,
+                cost_per_replica_s=cost_per_replica_s)),
+        policy=PolicySpec(policy="modipick", kwargs={"t_threshold": 20.0},
+                          queue_aware=True),
+        seed=seed)
+
+
+register(elastic_scenario(kind="step", name="elastic_step"))
+register(elastic_scenario(kind="proportional", name="elastic_proportional"))
+register(elastic_scenario(kind="cost_weighted", cost_per_replica_s=0.5,
+                          name="elastic_cost_weighted"))
 
 
 # ----------------------------------------------------------------------

@@ -181,16 +181,33 @@ class NetworkSpec:
         _require(self.std_ms >= 0.0, "std_ms must be non-negative")
 
 
+CONTROLLER_KINDS = ("step", "proportional", "cost_weighted")
+
+
 @dataclass(frozen=True)
 class AutoscalerSpec:
-    """Closed-loop replica scaling targets (``QueueTargetAutoscaler``)."""
+    """Closed-loop replica scaling targets.
+
+    ``control_interval_ms == 0`` (the default) keeps the historical
+    epoch-boundary path: ``QueueTargetAutoscaler.decide`` resizes the
+    pool between epochs, instantaneously and for free.  A positive
+    interval arms the *mid-run* elastic lifecycle
+    (``sim.elastic.ElasticConfig``): a controller of ``kind`` ticks on
+    the engine's event queue every interval, scale-up pays
+    ``cold_start_ms`` per replica (WARMING -> UP), scale-in drains
+    before decommissioning, and replica-seconds are priced at
+    ``cost_per_replica_s`` on the bench frontier."""
     target_queue_ms: float = 50.0    # scale up above this mean queue wait
     max_shed_rate: float = 0.02      # ... or above this router shed rate
     max_fallback_rate: float = 0.25  # ... or above this router fallback rate
     min_replicas: int = 1
     max_replicas: int = 8
-    step: int = 1                    # replicas added/removed per epoch
+    step: int = 1                    # replicas added/removed per decision
     low_utilization: float = 0.3     # scale down below this mean busy frac
+    kind: str = "step"               # controller family (mid-run path)
+    control_interval_ms: float = 0.0  # 0 = epoch-boundary (historical)
+    cold_start_ms: float = 0.0       # WARMING -> UP delay per new replica
+    cost_per_replica_s: float = 0.0  # frontier price per replica-second
 
     def __post_init__(self):
         _require(self.target_queue_ms > 0.0, "target_queue_ms must be > 0")
@@ -201,6 +218,25 @@ class AutoscalerSpec:
         _require(1 <= self.min_replicas <= self.max_replicas,
                  "need 1 <= min_replicas <= max_replicas")
         _require(self.step >= 1, "step must be >= 1")
+        _require(self.kind in CONTROLLER_KINDS,
+                 f"controller kind must be one of {CONTROLLER_KINDS}, "
+                 f"got {self.kind!r}")
+        _require(self.control_interval_ms >= 0.0,
+                 "control_interval_ms must be non-negative "
+                 "(0 = epoch-boundary scaling)")
+        _require(self.cold_start_ms >= 0.0,
+                 "cold_start_ms must be non-negative")
+        _require(self.cost_per_replica_s >= 0.0,
+                 "cost_per_replica_s must be non-negative")
+        if self.control_interval_ms == 0.0:
+            _require(self.kind == "step",
+                     f"controller kind {self.kind!r} needs a mid-run tick "
+                     "(control_interval_ms > 0); the epoch-boundary path "
+                     "is the step policy")
+            _require(self.cold_start_ms == 0.0,
+                     "cold_start_ms needs control_interval_ms > 0 "
+                     "(epoch-boundary scaling is instantaneous by "
+                     "construction)")
 
 
 @dataclass(frozen=True)
@@ -413,10 +449,23 @@ class Scenario:
 
     def __post_init__(self):
         _require(bool(self.name), "Scenario needs a non-empty name")
-        if self.deployment.autoscaler is not None:
-            _require(self.workload.epochs > 1,
-                     "an autoscaler needs workload.epochs > 1 "
-                     "(it acts between epochs)")
+        asc = self.deployment.autoscaler
+        if asc is not None:
+            if asc.control_interval_ms == 0.0:
+                _require(self.workload.epochs > 1,
+                         "an epoch-boundary autoscaler needs "
+                         "workload.epochs > 1 (it acts between epochs; "
+                         "set control_interval_ms > 0 for a mid-run "
+                         "controller)")
+            else:
+                # Mid-run provisioning creates shared replicas (they
+                # serve the whole zoo); a per_model pool would change
+                # topology semantics mid-run.
+                _require(self.deployment.topology == "shared",
+                         "a mid-run controller "
+                         "(control_interval_ms > 0) needs the shared "
+                         "topology (provisioned replicas serve every "
+                         "model)")
         if self.deployment.faults or self.deployment.drifts:
             # Fault times reference one engine timeline; multi-epoch
             # runs re-zero time per epoch, which would replay every
@@ -441,7 +490,10 @@ class Scenario:
                      f"arrivals, got {self.workload.arrival!r}")
             _require(self.deployment.autoscaler is None,
                      "fleet + autoscaler is not supported (cells have "
-                     "fixed replica topologies)")
+                     "fixed replica topologies); run one elastic "
+                     "scenario per cell instead — a shared-topology "
+                     "Scenario with autoscaler.control_interval_ms > 0 "
+                     "gives each cell its own mid-run controller")
             _require(not self.deployment.faults
                      and not self.deployment.drifts,
                      "fleet + fault/drift injection is not supported")

@@ -37,26 +37,31 @@ from repro.router.queueaware import (QueueAwareSelector, queue_aware_budget,
 from repro.sim.arrivals import (ArrivalProcess, ClosedLoopArrivals,
                                 PoissonArrivals, TraceArrivals, burst_trace,
                                 diurnal_trace)
+from repro.sim.elastic import (CONTROLLER_KINDS, ControlReading,
+                               ElasticConfig, make_controller)
 from repro.sim.engine import (LoadSimResult, ServingSimulator, SimRequest,
                               rate_sweep)
-from repro.sim.events import (ARRIVAL, DEPART, ENQUEUE, FAULT, FINISH,
-                              EventQueue)
+from repro.sim.events import (ARRIVAL, CONTROL, DEPART, ENQUEUE, FAULT,
+                              FINISH, PROVISION, EventQueue)
 from repro.sim.faults import (FaultEvent, LatencyDrift, NetworkDrift,
                               ReplicaFault, schedule_faults)
 from repro.sim.replica import (DEGRADED, DOWN, DRAINING, HEALTH_STATES, UP,
-                               GaussianServiceModel, Replica, ReplicaPool,
-                               per_model_replicas, shared_replicas)
+                               WARMING, GaussianServiceModel, Replica,
+                               ReplicaPool, per_model_replicas,
+                               shared_replicas)
 
 __all__ = [
     "ArrivalProcess", "ClosedLoopArrivals", "PoissonArrivals",
     "TraceArrivals", "burst_trace", "diurnal_trace", "LoadSimResult",
     "ServingSimulator", "SimRequest",
-    "rate_sweep", "ARRIVAL", "DEPART", "ENQUEUE", "FAULT", "FINISH",
-    "EventQueue",
+    "rate_sweep", "ARRIVAL", "CONTROL", "DEPART", "ENQUEUE", "FAULT",
+    "FINISH", "PROVISION", "EventQueue",
     "FaultEvent", "LatencyDrift", "NetworkDrift", "ReplicaFault",
     "schedule_faults",
     "QueueAwareSelector", "queue_aware_budget", "shifted_store",
     "GaussianServiceModel", "Replica", "ReplicaPool", "per_model_replicas",
     "shared_replicas",
-    "UP", "DEGRADED", "DRAINING", "DOWN", "HEALTH_STATES",
+    "UP", "DEGRADED", "WARMING", "DRAINING", "DOWN", "HEALTH_STATES",
+    "CONTROLLER_KINDS", "ControlReading", "ElasticConfig",
+    "make_controller",
 ]

@@ -63,12 +63,13 @@ from repro.core.zoo import ZooEntry, make_store, true_profiles
 from repro.router import AdmissionController, Router
 from repro.router.retry import RetryPolicy
 from repro.sim.arrivals import ArrivalProcess, ClosedLoopArrivals
-from repro.sim.events import (ARRIVAL, DEPART, ENQUEUE, FAULT, FINISH,
-                              EventQueue)
+from repro.sim.elastic import ControlReading, ElasticConfig, make_controller
+from repro.sim.events import (ARRIVAL, CONTROL, DEPART, ENQUEUE, FAULT,
+                              FINISH, PROVISION, EventQueue)
 from repro.sim.faults import (FaultEvent, LatencyDrift, NetworkDrift,
                               ReplicaFault, schedule_faults)
-from repro.sim.replica import (GaussianServiceModel, Replica, ReplicaPool,
-                               shared_replicas)
+from repro.sim.replica import (DEGRADED, UP, WARMING, GaussianServiceModel,
+                               Replica, ReplicaPool, shared_replicas)
 
 
 @dataclass
@@ -163,6 +164,17 @@ class LoadSimResult:
     # and serialized results predating them keep working.
     p95_latency: float = 0.0
     p95_queue_wait: float = 0.0
+    # Elastic lifecycle cost accounting: committed replica time
+    # integrated over the horizon (seconds — the frontier's cost axis;
+    # a static pool reports exactly n × horizon), provision and
+    # drain-decommission counts, and utilization normalized by each
+    # replica's *alive* window instead of the whole horizon (the
+    # scale-in guard's undiluted signal — identical to the
+    # replica_utilization mean on static fault-free pools).
+    replica_seconds: float = 0.0
+    mean_live_utilization: float = 0.0
+    n_provisioned: int = 0
+    n_decommissioned: int = 0
 
     @property
     def violation_rate(self) -> float:
@@ -182,7 +194,8 @@ class ServingSimulator:
                  backend: Optional[str] = None,
                  charge_batches: bool = True,
                  faults: Sequence[FaultEvent] = (),
-                 retry: Optional[RetryPolicy] = None):
+                 retry: Optional[RetryPolicy] = None,
+                 elastic: Optional[ElasticConfig] = None):
         self.entries = list(entries)
         self.network = network
         if replicas is None:
@@ -219,6 +232,18 @@ class ServingSimulator:
         # means a lost request is simply rejected.
         self.faults = tuple(faults)
         self.retry = retry
+        # Elastic replica lifecycle (``sim/elastic.py``): a mid-run
+        # controller ticking on the event queue, provisioning WARMING
+        # replicas and drain-decommissioning idle ones.  None keeps the
+        # static pool and every seeded golden bit-identical (the
+        # controller path is draw-free, but None skips it entirely).
+        self.elastic = elastic
+        self._n_provisioned = 0
+        self._n_decommissioned = 0
+        # The constructed pool size: run() truncates back to it so
+        # replicas provisioned by a previous run never leak into the
+        # next one (pool.reset() alone would resurrect them as UP).
+        self._base_pool_n = len(self.pool.replicas)
         self.router: Optional[Router] = None  # built per run()
         # Post-run SoA state (lazy SimRequest materialization).
         self._cols: Optional[_Columns] = None
@@ -301,6 +326,7 @@ class ServingSimulator:
                         queue_aware=self.queue_aware, backend=self.backend,
                         trace_detail=False)
         self.router = router
+        del self.pool.replicas[self._base_pool_n:]
         self.pool.reset()
 
         n = n_requests
@@ -397,6 +423,22 @@ class ServingSimulator:
                                  f"{f.model!r} (zoo: {names})")
         schedule_faults(evq, self.faults)
         net_scale = 1.0           # live RTT multiplier (NetworkDrift)
+        # Elastic lifecycle (``sim/elastic.py``): the controller tick
+        # rides the same queue as faults and requests.  The whole path
+        # is draw-free — it never touches the RNG — and ``None`` skips
+        # it entirely, keeping static-pool seeded runs bit-identical.
+        elastic = self.elastic
+        controller = make_controller(elastic) if elastic is not None \
+            else None
+        self._n_provisioned = 0
+        self._n_decommissioned = 0
+        track_wait = elastic is not None
+        win_wait = [0.0, 0]       # window's observed start-waits (sum, n)
+        last_busy = [0.0]         # pool busy-ms integral at the last tick
+        drain_pending: Dict[int, Replica] = {}   # id -> draining victim
+        tmpl_depth = self.pool.replicas[0].max_queue_depth
+        if elastic is not None and n > 0:
+            evq.push(elastic.control_interval_ms, CONTROL, None)
         retry = self.retry
         retries_c = cols.retries
         check_overrun = retry is not None and retry.reroute_on_overrun
@@ -442,6 +484,9 @@ class ServingSimulator:
                         continue
                 sstart_c[rid] = t0
                 store.observe_queue(names[mid], t0 - t_enq)
+                if track_wait:
+                    win_wait[0] += t0 - t_enq
+                    win_wait[1] += 1
                 t_inf = svc.sample(rng, names[mid], replica.speed)
                 if svc_scale is not None:
                     # The TRUE input class's latency effect (easy inputs
@@ -519,6 +564,57 @@ class ServingSimulator:
             depart_c[rid] = depart_ms
             rejected.append(rid)
             issue_next_closed_loop(now)
+
+        # -- elastic lifecycle actions (scale decisions act here) -------
+        def try_decommission(replica: Replica, now: float) -> None:
+            """Drain-based scale-in completes: the victim's queue is
+            empty and nothing is in flight — stop accruing cost.  Every
+            request it held has finished; zero are lost."""
+            if (id(replica) in drain_pending and replica.current is None
+                    and not replica.queue):
+                del drain_pending[id(replica)]
+                replica.decommission(now)
+                self._n_decommissioned += 1
+
+        def provision(count: int, now: float) -> None:
+            """Scale-up: ``count`` replicas born WARMING (not accepting,
+            ``inf`` wait columns) — each flips to UP only when its ready
+            event fires after ``cold_start_ms``."""
+            for _ in range(count):
+                r = Replica(name=f"e{self._n_provisioned}", models=(),
+                            speed=1.0, max_queue_depth=tmpl_depth)
+                r.start_warming(now)
+                idx = self.pool.add_replica(r)
+                replica_index[id(r)] = idx
+                replica_by_name[r.name] = r
+                self._n_provisioned += 1
+                if elastic.cold_start_ms > 0.0:
+                    evq.push(now + elastic.cold_start_ms, PROVISION,
+                             ("ready", r, r.gen))
+                else:
+                    r.warm_ready()
+
+        def scale_in(count: int, now: float) -> None:
+            """Scale-in: cancel still-WARMING replicas first (newest
+            first — they never served, and the bumped incarnation
+            orphans their pending ready events), then drain the
+            least-loaded accepting replicas; a drained victim
+            decommissions only once its queue is empty."""
+            warming = [r for r in reversed(self.pool.replicas)
+                       if r.health == WARMING]
+            for r in warming[:count]:
+                r.gen += 1
+                r.decommission(now)
+                self._n_decommissioned += 1
+            count -= min(count, len(warming))
+            if count <= 0:
+                return
+            victims = sorted((r.depth(), -i, r) for i, r in
+                             enumerate(self.pool.replicas) if r.accepting)
+            for _, _, r in victims[:count]:
+                r.drain()
+                drain_pending[id(r)] = r
+                try_decommission(r, now)    # already idle → gone now
 
         while evq:
             ev = evq.pop()
@@ -715,6 +811,9 @@ class ServingSimulator:
                 evq.push(now + t_input_c[rid], DEPART, rid)
                 if replica.queue:
                     start_service(replica, now)
+                if drain_pending and replica.current is None \
+                        and not replica.queue:
+                    try_decommission(replica, now)
 
             elif ev.kind == DEPART:
                 rid = ev.data
@@ -740,7 +839,7 @@ class ServingSimulator:
                             victims.append(int(r.current))
                         while r.queue:
                             victims.append(r.pop_request())
-                        r.kill()
+                        r.kill(now)
                         for vid in victims:
                             reroute(vid, now, "replica failure")
                     elif f.kind == "degrade":
@@ -748,11 +847,76 @@ class ServingSimulator:
                     elif f.kind == "drain":
                         r.drain()
                     else:   # recover
-                        r.recover()
+                        r.recover(now)
                 elif isinstance(f, LatencyDrift):
                     svc.set_drift(f.model, f.mu_mult, f.sigma_mult)
                 else:       # NetworkDrift
                     net_scale = f.rtt_mult
+
+            elif ev.kind == CONTROL:
+                # Mid-run controller tick: one window of telemetry in,
+                # one desired committed-replica count out.  Entirely
+                # draw-free — the RNG stream is untouched.
+                for r in list(drain_pending.values()):
+                    try_decommission(r, now)
+                wstats = router.window_stats()
+                routed = max(int(wstats["n_routed"]), 1)
+                # The observed start-wait mean lags a load step by a
+                # queue's length (requests still waiting left no sample
+                # yet), so pair it with the instantaneous backlog
+                # estimate and act on whichever is worse.  The backlog
+                # excludes each replica's in-service remainder: a lone
+                # busy server with an empty queue is healthy, not a
+                # scale-up signal.
+                inst = []
+                for r, w in zip(self.pool.replicas,
+                                self.pool.wait_columns(now)):
+                    if w == float("inf"):
+                        continue
+                    if r.current is not None:
+                        w -= max(0.0, r.busy_until - now)
+                    inst.append(w)
+                obs = win_wait[0] / win_wait[1] if win_wait[1] else 0.0
+                wait_sig = max(obs, float(np.mean(inst)) if inst else 0.0)
+                serving = [r for r in self.pool.replicas
+                           if r.health in (UP, DEGRADED)]
+                busy_now = sum(r.busy_ms for r in self.pool.replicas)
+                util = ((busy_now - last_busy[0])
+                        / (max(len(serving), 1)
+                           * elastic.control_interval_ms))
+                reading = ControlReading(
+                    mean_queue_wait_ms=wait_sig,
+                    shed_rate=wstats["n_shed"] / routed,
+                    fallback_rate=wstats["n_fallback"] / routed,
+                    utilization=util,
+                    n_routed=int(wstats["n_routed"]))
+                # WARMING replicas count as committed capacity — they
+                # are already paid for and about to come up; excluding
+                # them would double-provision through every cold start.
+                n_ctl = len(serving) + sum(
+                    1 for r in self.pool.replicas if r.health == WARMING)
+                desired = controller.target(n_ctl, reading)
+                if desired > n_ctl:
+                    evq.push(now, PROVISION, ("create", desired - n_ctl))
+                elif desired < n_ctl:
+                    scale_in(n_ctl - desired, now)
+                last_busy[0] = busy_now
+                win_wait[0] = 0.0
+                win_wait[1] = 0
+                if len(completed) + len(rejected) < n:
+                    evq.push(now + elastic.control_interval_ms,
+                             CONTROL, None)
+
+            elif ev.kind == PROVISION:
+                if ev.data[0] == "create":
+                    provision(ev.data[1], now)
+                else:
+                    _, r, gen = ev.data
+                    if r.gen == gen:
+                        # Cold start complete: WARMING -> UP.  A bumped
+                        # incarnation means the replica was cancelled
+                        # while warming — it never serves.
+                        r.warm_ready()
 
         # Per-run request records stay inspectable (per-SLA-class slicing
         # in tests and frontier studies reads them after run()) —
@@ -909,6 +1073,12 @@ class ServingSimulator:
                                          truth, acc_of)
         n_retries = int(cols.retries.sum())
         if not completed:
+            if len(rj):
+                first = float(cols.arrival[rj].min())
+                last = float(cols.depart[rj].max())
+            else:
+                first = last = 0.0
+            rep_s, live_util = self._elastic_cost(first, last)
             return LoadSimResult(
                 policy=policy_name, t_sla=t_sla,
                 n_arrived=n_arrived, n_completed=0, n_rejected=len(rejected),
@@ -916,7 +1086,10 @@ class ServingSimulator:
                 p50_latency=0.0, p99_latency=0.0, mean_queue_wait=0.0,
                 p99_queue_wait=0.0, peak_queue_depth=0, model_usage={},
                 replica_utilization={}, per_class=per_class,
-                n_retries=n_retries)
+                n_retries=n_retries,
+                replica_seconds=rep_s, mean_live_utilization=live_util,
+                n_provisioned=self._n_provisioned,
+                n_decommissioned=self._n_decommissioned)
         model_ids = {name: i for i, name in enumerate(truth)}
         ci = np.asarray(completed, dtype=np.int64)
         t_input = cols.t_input[ci]
@@ -941,6 +1114,7 @@ class ServingSimulator:
             first = min(first, float(cols.arrival[rj].min()))
             last = max(last, float(cols.depart[rj].max()))
         horizon = max(last - first, 1e-9)
+        rep_s, live_util = self._elastic_cost(first, last)
         return LoadSimResult(
             policy=policy_name, t_sla=t_sla,
             n_arrived=n_arrived, n_completed=len(completed),
@@ -961,7 +1135,29 @@ class ServingSimulator:
                                  for r in self.pool.replicas},
             horizon_ms=horizon,
             per_class=per_class,
-            n_retries=n_retries)
+            n_retries=n_retries,
+            replica_seconds=rep_s, mean_live_utilization=live_util,
+            n_provisioned=self._n_provisioned,
+            n_decommissioned=self._n_decommissioned)
+
+    def _elastic_cost(self, first: float, last: float):
+        """Replica-seconds (committed window ∩ horizon, minus dead time,
+        summed over the pool — the frontier's cost axis) and the
+        alive-window-normalized mean utilization.  On a static
+        fault-free pool: exactly n × horizon and the plain mean of
+        ``replica_utilization``."""
+        alive = [r.alive_ms(first, last) for r in self.pool.replicas]
+        live = [r.busy_ms / a for r, a in zip(self.pool.replicas, alive)
+                if a > 1e-9]
+        return (sum(alive) / 1000.0,
+                float(np.mean(live)) if live else 0.0)
+
+    def committed_replica_count(self) -> int:
+        """Replicas still accruing cost and able to (eventually) serve —
+        UP, DEGRADED, or WARMING.  The scenario harness carries this
+        across epochs when a mid-run controller resizes the pool."""
+        return sum(1 for r in self.pool.replicas
+                   if r.health in (UP, DEGRADED, WARMING))
 
     @staticmethod
     def _per_class_cols(cols: _Columns, completed: List[int],

@@ -19,6 +19,15 @@ DEPART = "depart"      # downlink done; response reached the device
 # Environment events (not tied to one request): replica lifecycle faults
 # and ground-truth drift, scheduled on the same queue (``sim/faults.py``).
 FAULT = "fault"
+# Elastic replica lifecycle (``sim/elastic.py``): PROVISION carries both
+# halves of a scale-up — ``("create", count)`` materializes replicas in
+# the WARMING state, ``("ready", replica, gen)`` flips one to UP after
+# its cold start (the ``gen`` token orphans readies for replicas that
+# were cancelled while warming).  CONTROL is the mid-run controller
+# tick, rescheduling itself every ``control_interval_ms`` while
+# requests remain outstanding.
+PROVISION = "provision"
+CONTROL = "control"
 
 
 class Event(NamedTuple):

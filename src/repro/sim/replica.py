@@ -43,15 +43,19 @@ from repro.router.charging import ChargedWaits
 # from O(depth) into O(n_models).
 EXACT_WALK_MAX = 64
 
-# Replica health states (fault injection, ``sim/faults.py``): UP and
-# DEGRADED accept new work; DRAINING finishes its queue but accepts
-# nothing; DOWN serves nothing.  ``Replica.accepting`` caches the
-# accepts-new-work predicate so the wait-column hot path reads one bool.
+# Replica health states (fault injection, ``sim/faults.py``; elastic
+# lifecycle, ``sim/elastic.py``): UP and DEGRADED accept new work;
+# WARMING is provisioned but still cold-starting (accepts nothing,
+# serves nothing — it becomes UP only after ``cold_start_ms``);
+# DRAINING finishes its queue but accepts nothing; DOWN serves nothing.
+# ``Replica.accepting`` caches the accepts-new-work predicate so the
+# wait-column hot path reads one bool.
 UP = "up"
 DEGRADED = "degraded"
+WARMING = "warming"
 DRAINING = "draining"
 DOWN = "down"
-HEALTH_STATES = (UP, DEGRADED, DRAINING, DOWN)
+HEALTH_STATES = (UP, DEGRADED, WARMING, DRAINING, DOWN)
 
 _INF = float("inf")
 
@@ -131,6 +135,18 @@ class Replica:
     gen: int = 0
     base_speed: Optional[float] = field(default=None, repr=False)
 
+    # Elastic lifecycle cost accounting (``sim/elastic.py``): a replica
+    # accrues cost from ``commission_ms`` (0.0 for the static pool the
+    # run started with) until ``decommission_ms`` (None = still
+    # committed at run end).  ``down_ms_total``/``down_since`` subtract
+    # mid-run dead time (kill → recover windows) so the live-window
+    # utilization the autoscaler reads is not diluted by intervals a
+    # replica could not have served.
+    commission_ms: float = 0.0
+    decommission_ms: Optional[float] = None
+    down_ms_total: float = 0.0
+    down_since: Optional[float] = field(default=None, repr=False)
+
     # SoA binding (set by ReplicaPool.bind); None == legacy object mode.
     _model_of: Optional[Sequence[int]] = field(default=None, repr=False,
                                                init=False)
@@ -141,16 +157,20 @@ class Replica:
         return not self.models or model in self.models
 
     # -- health transitions (fault injection) ---------------------------
-    def kill(self) -> None:
+    def kill(self, now: Optional[float] = None) -> None:
         """Hard failure: drop out of service.  The caller (engine FAULT
         handler) reads ``current`` and drains ``queue`` *before* calling
         this, then re-routes the victims; bumping ``gen`` invalidates
-        the in-flight FINISH event."""
+        the in-flight FINISH event.  ``now`` (when the caller knows the
+        simulation clock) starts the dead-time window that live-window
+        utilization subtracts; legacy no-arg calls skip the tracking."""
         self.health = DOWN
         self.accepting = False
         self.gen += 1
         self.current = None
         self.busy_until = 0.0
+        if now is not None and self.down_since is None:
+            self.down_since = now
 
     def degrade(self, factor: float) -> None:
         """Slow down by ``factor`` (co-tenant pressure, thermal
@@ -166,13 +186,61 @@ class Replica:
         self.health = DRAINING
         self.accepting = False
 
-    def recover(self) -> None:
+    def recover(self, now: Optional[float] = None) -> None:
         """Back to full speed and accepting (from any state)."""
         if self.base_speed is not None:
             self.speed = self.base_speed
             self.base_speed = None
         self.health = UP
         self.accepting = True
+        if now is not None and self.down_since is not None:
+            self.down_ms_total += max(0.0, now - self.down_since)
+            self.down_since = None
+
+    # -- elastic lifecycle (``sim/elastic.py``) -------------------------
+    def start_warming(self, now: float) -> None:
+        """Provisioned but cold-starting: committed (accruing cost from
+        ``now``) yet serving nothing until :meth:`warm_ready`."""
+        self.health = WARMING
+        self.accepting = False
+        self.commission_ms = now
+
+    def warm_ready(self) -> None:
+        """Cold start complete: start accepting.  The caller (engine
+        PROVISION handler) checks the incarnation token first, so a
+        replica cancelled while warming never flips to UP."""
+        if self.health == WARMING:
+            self.health = UP
+            self.accepting = True
+
+    def decommission(self, now: float) -> None:
+        """Leave the pool for good: stop accruing cost at ``now``.  Only
+        legal on an idle replica — drain-based scale-in finishes the
+        queue first, so no in-flight request is ever lost to a
+        decommission."""
+        assert self.current is None and not self.queue, \
+            f"decommission of non-idle replica {self.name!r}"
+        self.health = DOWN
+        self.accepting = False
+        self.decommission_ms = now
+
+    def committed(self) -> bool:
+        """Accruing cost: provisioned (even if still warming or
+        draining) and not yet decommissioned/killed."""
+        return self.decommission_ms is None and self.health != DOWN
+
+    def alive_ms(self, first_ms: float, last_ms: float) -> float:
+        """The committed window overlapped with ``[first_ms, last_ms]``,
+        minus mid-run dead time — the denominator for live-window
+        utilization and the replica-seconds cost integral.  Static
+        always-up replicas report exactly the horizon."""
+        start = max(first_ms, self.commission_ms)
+        end = last_ms if self.decommission_ms is None \
+            else min(last_ms, self.decommission_ms)
+        alive = max(0.0, end - start) - self.down_ms_total
+        if self.down_since is not None:     # still down at run end
+            alive -= max(0.0, end - max(self.down_since, start))
+        return max(alive, 0.0)
 
     def depth(self) -> int:
         return len(self.queue) + (1 if self.current is not None else 0)
@@ -225,6 +293,10 @@ class Replica:
         self.health = UP
         self.accepting = True
         self.gen = 0
+        self.commission_ms = 0.0
+        self.decommission_ms = None
+        self.down_ms_total = 0.0
+        self.down_since = None
         if self.base_speed is not None:
             self.speed = self.base_speed
             self.base_speed = None
@@ -276,6 +348,27 @@ class ReplicaPool:
                              for n in model_names]
         self._speeds = np.array([r.speed for r in self.replicas])
         self._mu_now = mu_now
+
+    def add_replica(self, r: Replica) -> int:
+        """Mid-run pool extension (elastic scale-up): append ``r`` and —
+        when the pool is bound — splice it into every bind-frozen SoA
+        cache (candidate lists/arrays, speed column, per-replica count
+        vector) so the wait-column and charged-state hot paths see the
+        newcomer without a rebind.  Returns the new pool index."""
+        idx = len(self.replicas)
+        self.replicas.append(r)
+        if self._cands is not None:
+            r._model_of = self.replicas[0]._model_of
+            r._mu = self._mu_now
+            r._counts = [0] * len(self._names)
+            for j, name in enumerate(self._names):
+                if r.serves(name):
+                    self._cands[name].append(r)
+                    self._cand_idx[name].append(idx)
+                    self._cand_arrays[j] = np.append(self._cand_arrays[j],
+                                                     np.int64(idx))
+            self._speeds = np.append(self._speeds, r.speed)
+        return idx
 
     def candidates(self, model: str) -> List[Replica]:
         if self._cands is not None:

@@ -1,0 +1,437 @@
+"""Elastic replica lifecycle: WARMING cold starts, drain-based
+scale-in, mid-run controllers (unit + engine + harness), cost
+accounting identities, ``Router.window_stats()`` deltas, the
+autoscaler's live-utilization scale-in guard, the fleet+autoscaler
+rejection pin, and ``attainment_timeline`` edge cases."""
+import numpy as np
+import pytest
+
+from repro.core.netmodel import NetworkModel
+from repro.core.policy import ModiPick
+from repro.core.profiles import ModelProfile, ProfileStore
+from repro.core.zoo import TABLE2
+from repro.fleet.spec import CellSpec, FleetSpec
+from repro.router import InferenceRequest, Router, SlaAwareAdmission
+from repro.scenario import (AutoscalerSpec, DeploymentSpec, NetworkSpec,
+                            PolicySpec, QueueTargetAutoscaler, Scenario,
+                            WorkloadSpec, build)
+from repro.scenario.registry import elastic_scenario
+from repro.sim import (DOWN, UP, WARMING, ControlReading, ElasticConfig,
+                       PoissonArrivals, Replica, ReplicaFault,
+                       ServingSimulator, TraceArrivals, make_controller,
+                       shared_replicas)
+from repro.sim.elastic import (CostWeightedController,
+                               ProportionalController, StepController)
+
+NET = NetworkModel(40.0, 10.0)
+INF = float("inf")
+
+# Controller-unit knobs: target 50 ms, step 2, pool bounds [1, 8].
+CFG = dict(control_interval_ms=100.0, target_queue_ms=50.0,
+           max_shed_rate=0.02, max_fallback_rate=0.25,
+           min_replicas=1, max_replicas=8, step=2, low_utilization=0.3)
+
+
+def _cfg(**kw):
+    return ElasticConfig(**{**CFG, **kw})
+
+
+def _r(wait=0.0, shed=0.0, fb=0.0, util=0.5):
+    return ControlReading(mean_queue_wait_ms=wait, shed_rate=shed,
+                          fallback_rate=fb, utilization=util, n_routed=10)
+
+
+def _bound(pool, names=("a", "b"), mus=(10.0, 20.0)):
+    model_of = np.zeros(64, dtype=np.int64)
+    pool.bind(tuple(names), model_of, list(mus))
+    return pool
+
+
+# ----------------------------------------------------------------------
+# config validation
+# ----------------------------------------------------------------------
+
+def test_elastic_config_validation():
+    with pytest.raises(ValueError, match="kind"):
+        _cfg(kind="bogus")
+    with pytest.raises(ValueError, match="control_interval_ms"):
+        _cfg(control_interval_ms=0.0)
+    with pytest.raises(ValueError, match="cold_start_ms"):
+        _cfg(cold_start_ms=-1.0)
+    with pytest.raises(ValueError, match="confirm_windows"):
+        _cfg(confirm_windows=0)
+    with pytest.raises(ValueError, match="cost_per_replica_s"):
+        _cfg(cost_per_replica_s=-0.1)
+    with pytest.raises(ValueError, match="step"):
+        _cfg(step=0)
+    with pytest.raises(ValueError, match="min_replicas"):
+        _cfg(min_replicas=9, max_replicas=8)
+
+
+def test_autoscaler_spec_mid_run_constraints():
+    # The epoch-boundary degenerate path IS the step policy; a non-step
+    # kind or a cold start without a mid-run tick is a config error.
+    with pytest.raises(ValueError, match="mid-run tick"):
+        AutoscalerSpec(kind="proportional")
+    with pytest.raises(ValueError, match="cold_start_ms"):
+        AutoscalerSpec(cold_start_ms=500.0)
+    AutoscalerSpec(kind="proportional", control_interval_ms=500.0,
+                   cold_start_ms=500.0)        # armed: both are fine
+
+
+def test_mid_run_controller_requires_shared_topology():
+    with pytest.raises(ValueError, match="shared topology"):
+        Scenario(
+            name="bad",
+            workload=WorkloadSpec(arrival="poisson", rate_rps=5.0,
+                                  n_requests=100, t_sla_ms=250.0),
+            network=NetworkSpec(mean_ms=40.0, std_ms=10.0),
+            deployment=DeploymentSpec(
+                topology="per_model",
+                autoscaler=AutoscalerSpec(control_interval_ms=500.0)),
+            policy=PolicySpec(policy="modipick",
+                              kwargs={"t_threshold": 20.0}))
+
+
+def test_fleet_autoscaler_rejection_names_per_cell_workaround():
+    """The fleet+autoscaler rejection must point at the supported
+    composition: one elastic (mid-run controller) scenario per cell."""
+    with pytest.raises(ValueError,
+                       match="run one elastic scenario per cell"):
+        Scenario(
+            name="bad",
+            workload=WorkloadSpec(arrival="poisson", rate_rps=5.0,
+                                  n_requests=100, t_sla_ms=250.0),
+            network=NetworkSpec(mean_ms=40.0, std_ms=10.0),
+            deployment=DeploymentSpec(
+                topology="shared",
+                autoscaler=AutoscalerSpec(control_interval_ms=500.0),
+                fleet=FleetSpec(cells=(CellSpec("a"), CellSpec("b")))),
+            policy=PolicySpec(policy="modipick",
+                              kwargs={"t_threshold": 20.0}))
+
+
+# ----------------------------------------------------------------------
+# controllers (unit)
+# ----------------------------------------------------------------------
+
+def test_make_controller_kinds():
+    assert isinstance(make_controller(_cfg(kind="step")), StepController)
+    assert isinstance(make_controller(_cfg(kind="proportional")),
+                      ProportionalController)
+    assert isinstance(make_controller(_cfg(kind="cost_weighted")),
+                      CostWeightedController)
+
+
+def test_confirm_windows_gates_scale_up():
+    c = make_controller(_cfg(kind="step", confirm_windows=2))
+    hot = _r(wait=100.0)
+    assert c.target(1, hot) == 1          # first hot window: held
+    assert c.target(1, hot) == 3          # confirmed: +step
+    assert c.target(3, _r(wait=0.0, util=0.9)) == 3   # cool resets...
+    assert c.target(3, hot) == 3          # ...so the streak restarts
+    assert c.target(3, hot) == 5
+
+
+def test_step_controller_idle_hysteresis_and_floor():
+    c = make_controller(_cfg(kind="step", confirm_windows=1))
+    # comfortable: wait < target/4, no shed, util under the low bar
+    assert c.target(5, _r(wait=1.0, util=0.1)) == 3
+    assert c.target(1, _r(wait=1.0, util=0.0)) == 1   # min_replicas floor
+    # low wait but still busy: hold, don't flap
+    assert c.target(5, _r(wait=1.0, util=0.9)) == 5
+    # shedding is pressure, not idleness: +step even with wait/util low
+    assert c.target(5, _r(wait=1.0, shed=0.5, util=0.1)) == 7
+
+
+def test_proportional_answers_overshoot_in_one_confirmed_tick():
+    p = make_controller(_cfg(kind="proportional", confirm_windows=1))
+    assert p.target(2, _r(wait=500.0)) == 8   # ceil(2*10) clamped to max
+    assert p.target(2, _r(wait=55.0)) == 3    # ceil(2*1.1)
+    # shed pressure with no wait signal still forces one step up (a
+    # shed request never queued, so it left no wait behind)
+    assert p.target(2, _r(wait=0.0, shed=0.5)) == 3
+    assert p.target(4, _r(wait=5.0, util=0.1)) == 3   # -1 per idle tick
+
+
+def test_cost_weighted_patience_ramp_cap_and_relaxed_idle():
+    cw = make_controller(_cfg(kind="cost_weighted", confirm_windows=1,
+                              cost_per_replica_s=1.0))
+    hot = _r(wait=500.0)
+    assert cw.target(2, hot) == 2     # priced capacity: one window is
+    assert cw.target(2, hot) == 4     # not enough; ramp capped at +step
+    # idle bar relaxed with the price: util 0.5 < 0.3*(1+1)
+    assert cw.target(4, _r(wait=20.0, util=0.5)) == 2
+    free = make_controller(_cfg(kind="cost_weighted", confirm_windows=1))
+    assert free.target(2, hot) == 4   # zero price: acts first window
+
+
+# ----------------------------------------------------------------------
+# WARMING semantics
+# ----------------------------------------------------------------------
+
+def test_warming_not_accepting_until_ready():
+    pool = _bound(shared_replicas(2))
+    r = pool.replicas[1]
+    r.start_warming(100.0)
+    assert r.health == WARMING and not r.accepting
+    assert r.commission_ms == 100.0
+    assert pool.wait_columns(now=100.0)[1] == INF
+    assert pool.best_for("a", 100.0, None) is pool.replicas[0]
+    r.warm_ready()
+    assert r.health == UP and r.accepting
+    assert pool.wait_columns(now=200.0)[1] == 0.0
+
+
+def test_cancelled_while_warming_never_flips_up():
+    r = Replica(name="e0")
+    r.start_warming(0.0)
+    r.gen += 1                  # scale-in cancels the cold start
+    r.decommission(50.0)
+    r.warm_ready()              # the orphaned ready event is a no-op
+    assert r.health == DOWN and not r.accepting
+    assert r.decommission_ms == 50.0
+
+
+def test_decommission_asserts_idle():
+    r = Replica(name="r0")
+    r.current = 7
+    with pytest.raises(AssertionError, match="non-idle"):
+        r.decommission(10.0)
+
+
+def test_alive_ms_cost_windows():
+    r = Replica(name="r0")                      # static: whole horizon
+    assert r.alive_ms(0.0, 1000.0) == 1000.0
+    r.start_warming(400.0)                      # commissioned mid-run
+    assert r.alive_ms(0.0, 1000.0) == 600.0
+    r.warm_ready()
+    r.decommission(900.0)                       # ... and decommissioned
+    assert r.alive_ms(0.0, 1000.0) == 500.0
+
+    k = Replica(name="r1")                      # mid-run dead time
+    k.kill(200.0)
+    k.recover(500.0)
+    assert k.alive_ms(0.0, 1000.0) == 700.0
+    k.kill(800.0)                               # still down at run end
+    assert k.alive_ms(0.0, 1000.0) == 500.0
+
+
+# ----------------------------------------------------------------------
+# Router.window_stats(): per-window deltas without zeroing
+# ----------------------------------------------------------------------
+
+def _router():
+    profiles = [ModelProfile(name="a", accuracy=0.6, mu=10.0, n_obs=100),
+                ModelProfile(name="b", accuracy=0.7, mu=20.0, n_obs=100)]
+    return Router(ProfileStore(profiles), ModiPick(t_threshold=20.0))
+
+
+def test_window_stats_deltas_leave_lifetime_counters_alone():
+    router = _router()
+    rng = np.random.default_rng(0)
+    req = InferenceRequest(t_sla_ms=400.0, t_input_ms=40.0)
+    for _ in range(2):
+        router.route(req, rng)
+    w1 = router.window_stats()
+    assert w1["n_routed"] == 2
+    for _ in range(3):
+        router.route(req, rng)
+    w2 = router.window_stats()
+    assert w2["n_routed"] == 3            # the delta, not the lifetime
+    assert w2["mean_batch"] == pytest.approx(1.0)
+    assert router.stats()["n_routed"] == 5   # lifetime: untouched
+    assert router.window_stats()["n_routed"] == 0
+    router.reset()
+    router.route(req, rng)
+    assert router.window_stats()["n_routed"] == 1   # base cleared too
+
+
+# ----------------------------------------------------------------------
+# autoscaler scale-in guard: dead replicas dilute the raw mean DOWNWARD
+# ----------------------------------------------------------------------
+
+class _FakeResult:
+    def __init__(self, utils, live=None):
+        self.mean_queue_wait = 1.0
+        self.replica_utilization = utils
+        if live is not None:
+            self.mean_live_utilization = live
+
+
+def test_autoscaler_live_utilization_blocks_spurious_scale_in():
+    """Two dead replicas at ~0 busy fraction drag the raw mean under
+    ``low_utilization`` while the lone survivor is saturated; the
+    alive-window read sees 0.85 and holds.  (The dilution direction is
+    DOWNWARD — it *promotes* scale-in, it does not block it.)"""
+    asc = QueueTargetAutoscaler(AutoscalerSpec(
+        target_queue_ms=50.0, min_replicas=1, max_replicas=8, step=1,
+        low_utilization=0.3))
+    stats = {"n_routed": 100, "n_shed": 0, "n_fallback": 0}
+    utils = {"r0": 0.85, "r1": 0.0, "r2": 0.0}      # raw mean ~0.28
+    held = asc.decide(3, stats, _FakeResult(utils, live=0.85))
+    assert held == 3
+    # Legacy results without the field fall back to the raw mean — and
+    # reproduce the pre-fix spurious scale-in this test documents.
+    legacy = asc.decide(3, stats, _FakeResult(utils))
+    assert legacy == 2
+    # A genuinely idle pool scales in under either read.
+    idle = {"r0": 0.05, "r1": 0.05, "r2": 0.05}
+    assert asc.decide(3, stats, _FakeResult(idle, live=0.05)) == 2
+
+
+# ----------------------------------------------------------------------
+# engine integration
+# ----------------------------------------------------------------------
+
+# A flash crowd (150 requests over 2 s) followed by a quiet tail
+# (60 requests over 15 s): the controller must ramp up through cold
+# starts, then drain-decommission its way back down.
+_BURST_TIMES = np.concatenate([np.linspace(0.0, 2_000.0, 150),
+                               np.linspace(20_000.0, 35_000.0, 60)])
+
+
+def _elastic_sim(**kw):
+    cfg = _cfg(**{**dict(kind="proportional", control_interval_ms=250.0,
+                         cold_start_ms=100.0, target_queue_ms=25.0),
+                  **kw})
+    return ServingSimulator(TABLE2, NET, shared_replicas(1), seed=3,
+                            queue_aware=True, elastic=cfg)
+
+
+def _elastic_run(sim):
+    return sim.run(ModiPick(t_threshold=20.0), 250.0, len(_BURST_TIMES),
+                   arrivals=TraceArrivals(_BURST_TIMES))
+
+
+def test_elastic_run_scales_up_then_drains_down_losing_nothing():
+    sim = _elastic_sim()
+    res = _elastic_run(sim)
+    assert res.n_provisioned > 0 and res.n_decommissioned > 0
+    # the zero-loss drain guarantee: every arrival is accounted for
+    assert res.n_completed + res.n_rejected == res.n_arrived
+    # provisioned capacity actually served the burst
+    assert any(r.name.startswith("e") and r.n_served > 0
+               for r in sim.pool.replicas)
+    # every decommissioned replica left idle — drain finished its queue
+    for r in sim.pool.replicas:
+        if r.decommission_ms is not None:
+            assert r.current is None and not r.queue
+    # cost sits strictly between always-1 and always-max
+    h = res.horizon_ms / 1000.0
+    assert h < res.replica_seconds < 8 * h
+
+
+def test_warming_replicas_never_serve_before_cold_start_completes():
+    """With a cold start longer than the run, provisioned replicas must
+    stay WARMING (or be cancelled) and serve exactly nothing."""
+    sim = _elastic_sim(cold_start_ms=10_000_000.0)
+    res = _elastic_run(sim)
+    assert res.n_provisioned > 0
+    elastic = [r for r in sim.pool.replicas if r.name.startswith("e")]
+    assert elastic
+    for r in elastic:
+        assert r.n_served == 0 and r.busy_ms == 0.0
+        assert r.health in (WARMING, DOWN)
+    assert res.n_completed + res.n_rejected == res.n_arrived
+
+
+def test_elastic_run_is_deterministic_and_pool_does_not_leak():
+    sim = _elastic_sim()
+    r1 = _elastic_run(sim)
+    n_after_first = len(sim.pool.replicas)
+    r2 = _elastic_run(sim)          # same sim: truncates, reruns
+    assert len(sim.pool.replicas) == n_after_first
+    assert r1.mean_latency == r2.mean_latency
+    assert r1.sla_attainment == r2.sla_attainment
+    assert r1.n_provisioned == r2.n_provisioned
+    assert r1.n_decommissioned == r2.n_decommissioned
+    assert r1.replica_seconds == r2.replica_seconds
+
+
+def test_static_pool_cost_identities():
+    """Fault-free static pools pin the cost model: replica-seconds is
+    exactly n x horizon, and the live-window utilization is the plain
+    replica_utilization mean — which is why the autoscaler's preferred
+    read preserves every epoch-boundary golden."""
+    sim = ServingSimulator(TABLE2, NET, shared_replicas(3), seed=11,
+                           queue_aware=True)
+    res = sim.run(ModiPick(t_threshold=20.0), 250.0, 200,
+                  arrivals=PoissonArrivals(20.0))
+    assert res.n_provisioned == 0 and res.n_decommissioned == 0
+    assert res.replica_seconds == pytest.approx(
+        3 * res.horizon_ms / 1000.0)
+    assert res.mean_live_utilization == pytest.approx(
+        float(np.mean(list(res.replica_utilization.values()))))
+
+
+# ----------------------------------------------------------------------
+# harness integration: the committed count carries across epochs
+# ----------------------------------------------------------------------
+
+def test_elastic_scenario_carries_committed_count_across_epochs():
+    sc = elastic_scenario(kind="proportional", control_interval_ms=200.0,
+                          cold_start_ms=100.0, n_requests=400,
+                          name="elastic_test")
+    out = build(sc).run()
+    assert out.replica_history[0] == 1
+    assert max(out.replica_history) > 1     # mid-run growth carried over
+    assert all(1 <= n <= 8 for n in out.replica_history)
+    assert sum(e.result.n_provisioned for e in out.epochs) > 0
+    lost = sum(e.result.n_arrived - e.result.n_completed
+               - e.result.n_rejected for e in out.epochs)
+    assert lost == 0
+
+
+# ----------------------------------------------------------------------
+# attainment_timeline edge cases
+# ----------------------------------------------------------------------
+
+def test_timeline_skips_empty_mid_run_buckets():
+    times = np.concatenate([np.arange(5) * 10.0,
+                            25_000.0 + np.arange(5) * 10.0])
+    sim = ServingSimulator(TABLE2, NET, shared_replicas(2), seed=1,
+                           queue_aware=True)
+    sim.run(ModiPick(t_threshold=20.0), 250.0, 10,
+            arrivals=TraceArrivals(times))
+    rows = sim.attainment_timeline(bucket_ms=1_000.0)
+    assert {r["t_ms"] for r in rows} == {0.0, 25_000.0}
+    assert all(r["n"] == 5 for r in rows)       # no zero-n filler rows
+
+
+def test_timeline_shed_only_bucket():
+    """A bucket whose every request was shed reports attainment 0,
+    shed_rate 1, and accuracy 0.0 (no completions to average)."""
+    times = np.concatenate([np.arange(5) * 10.0,
+                            25_000.0 + np.arange(5) * 10.0])
+    sim = ServingSimulator(TABLE2, NET, shared_replicas(2), seed=1,
+                           queue_aware=True, admission=SlaAwareAdmission())
+    # late arrivals get a 1 ms SLA the network alone exceeds: all shed
+    sim.run(ModiPick(t_threshold=20.0), 250.0, 10,
+            arrivals=TraceArrivals(times),
+            sla_for=lambda rid: 100_000.0 if rid < 5 else 1.0)
+    rows = {r["t_ms"]: r for r in sim.attainment_timeline(1_000.0)}
+    shed = rows[25_000.0]
+    assert shed["n"] == 5 and shed["shed_rate"] == 1.0
+    assert shed["attainment"] == 0.0 and shed["accuracy"] == 0.0
+    assert rows[0.0]["shed_rate"] == 0.0
+
+
+def test_timeline_conserves_counts_with_boundary_aligned_events():
+    """FAULT/CONTROL/PROVISION events landing exactly on a bucket
+    boundary neither lose nor double-count requests."""
+    sim = ServingSimulator(
+        TABLE2, NET, shared_replicas(2), seed=7, queue_aware=True,
+        faults=[ReplicaFault(at_ms=10_000.0, kind="kill", replica="r0"),
+                ReplicaFault(at_ms=20_000.0, kind="recover",
+                             replica="r0")])
+    res = sim.run(ModiPick(t_threshold=20.0), 250.0, 300,
+                  arrivals=PoissonArrivals(15.0))
+    rows = sim.attainment_timeline(bucket_ms=10_000.0)
+    assert sum(r["n"] for r in rows) == res.n_arrived
+    assert all(r["n"] > 0 and 0.0 <= r["attainment"] <= 1.0 for r in rows)
+
+    esim = _elastic_sim(control_interval_ms=1_000.0)   # ticks on 1 s edges
+    eres = _elastic_run(esim)
+    erows = esim.attainment_timeline(bucket_ms=1_000.0)
+    assert sum(r["n"] for r in erows) == eres.n_arrived

@@ -40,7 +40,8 @@ def test_round_trip_every_registered_scenario():
     names = list_scenarios()
     assert {"steady", "diurnal", "burst", "class_mix", "scale_up",
             "fleet_steady", "fleet_diurnal", "premodel_mix", "tail_sla",
-            "tail_sla_mean"} <= set(names)
+            "tail_sla_mean", "elastic_step", "elastic_proportional",
+            "elastic_cost_weighted"} <= set(names)
     for name in names:
         s = get_scenario(name)
         d = s.to_dict()
